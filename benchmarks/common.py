@@ -1,0 +1,81 @@
+"""Shared benchmark scaffolding.
+
+Model: the SmolLM-family reduced config (the paper's own deployment
+class is an SLM on a consumer device; our CPU plays the consumer
+device).  Engine + workload scales are fixed here so every figure uses
+identical conditions.
+
+SLO calibration follows §IV-A: thresholds are the *isolated* (single
+session, unloaded) TTFT/TPOT of the model-device pair scaled by a
+constant factor.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.metrics import SLOThresholds
+from repro.serving.policies import POLICIES
+from repro.serving.workload import make_workload
+
+BENCH_MODEL = ModelConfig(
+    name="smollm-bench", family="dense", num_layers=2, d_model=192,
+    num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=512,
+    tie_embeddings=True, source="bench")
+
+TOKEN_SCALE = 0.125          # Table-I lengths / 8 for CPU wall-clock
+SLO_FACTOR = 3.0             # paper: constant factor over isolated perf
+
+
+def engine_config(**kw) -> EngineConfig:
+    base = dict(num_slots=8, max_seq=768, cycle_budget=160, granularity=16,
+                b_min=16, b_max=256, b_init=64, delta_b=16,
+                control_interval_s=0.1, tpot_slo_ms=30.0, max_wall_s=240.0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@functools.lru_cache(maxsize=1)
+def bench_params():
+    return init_params(BENCH_MODEL, jax.random.PRNGKey(0))
+
+
+def make_engine(policy: str, **ecfg_kw) -> ServingEngine:
+    return ServingEngine(BENCH_MODEL, bench_params(), POLICIES[policy],
+                         engine_config(**ecfg_kw))
+
+
+@functools.lru_cache(maxsize=1)
+def calibrated_thresholds() -> SLOThresholds:
+    """Isolated performance: one session, no contention (§IV-A).
+
+    TTFT calibrates against the isolated p95 (the cold prefill is the
+    slowest legitimate request even unloaded); TPOT against the isolated
+    p50 (steady-state inter-token pace)."""
+    eng = make_engine("agentserve")
+    sessions = make_workload(1, vocab_size=BENCH_MODEL.vocab_size,
+                             token_scale=TOKEN_SCALE, seed=123)
+    rep = eng.run(sessions)
+    thr = SLOThresholds.from_isolated(rep.ttft_p95_s, rep.tpot_p50_s,
+                                      factor=SLO_FACTOR)
+    return thr
+
+
+def sessions_for(n: int, workload: str = "react", seed: int = 0):
+    return make_workload(n, workload=workload,
+                         vocab_size=BENCH_MODEL.vocab_size,
+                         token_scale=TOKEN_SCALE, num_system_prompts=1,
+                         seed=seed, stagger_s=0.1)
+
+
+def timed_csv_row(name: str, fn, derived: str = "") -> str:
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return f"{name},{us:.0f},{derived or out}"

@@ -1,0 +1,45 @@
+"""Fig 3 reproduction: normalized throughput versus resource share for
+decode / cold prefill / resume prefill.
+
+Resource axis: the decode share of the engine cycle token budget
+(DESIGN.md §2 — the TPU/CPU analogue of an SM share).  The paper's
+qualitative claim to reproduce: decode throughput rises quickly at low
+shares and saturates earlier than the prefill curves."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_MODEL, bench_params, engine_config
+from repro.serving.profiler import profile_throughput
+
+
+def run():
+    prof = profile_throughput(BENCH_MODEL, bench_params(),
+                              ecfg=engine_config(), reps=5)
+    return prof
+
+
+def saturation_knee(curve: np.ndarray, levels: np.ndarray) -> float:
+    """Smallest share reaching 90% of the curve's maximum."""
+    target = 0.9 * curve[-1]
+    idx = int(np.argmax(curve >= target))
+    return float(levels[idx])
+
+
+def main():
+    prof = run()
+    n = prof.levels / prof.levels[-1]
+    print("fig3: share,mu_decode_norm,mu_cold_norm,mu_resume_norm")
+    for i in range(len(prof.levels)):
+        print(f"fig3,{n[i]:.2f},{prof.mu_decode[i]/prof.mu_decode[-1]:.3f},"
+              f"{prof.mu_cold[i]/prof.mu_cold[-1]:.3f},"
+              f"{prof.mu_resume[i]/prof.mu_resume[-1]:.3f}")
+    kd = saturation_knee(prof.mu_decode, prof.levels)
+    kc = saturation_knee(prof.mu_cold, prof.levels)
+    print(f"fig3,knee_decode,{kd},knee_cold,{kc},"
+          f"decode_saturates_earlier,{kd <= kc}")
+    return prof
+
+
+if __name__ == "__main__":
+    main()

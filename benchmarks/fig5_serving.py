@@ -1,0 +1,37 @@
+"""Fig 5 reproduction: TTFT / TPOT / throughput under varying agent
+concurrency (3-6) for AgentServe vs the three baselines, on both
+workload paradigms (ReAct, Plan-and-Execute)."""
+from __future__ import annotations
+
+from benchmarks.common import calibrated_thresholds, make_engine, sessions_for
+from repro.serving.metrics import ServingReport
+
+POLICIES_ORDER = ("agentserve", "pd_static", "chunked", "fcfs")
+
+
+def run(concurrencies=(3, 4, 5, 6), workloads=("react", "plan_execute"),
+        seeds=(0,)):
+    thr = calibrated_thresholds()
+    rows = []
+    for wl in workloads:
+        for n in concurrencies:
+            for policy in POLICIES_ORDER:
+                for seed in seeds:
+                    eng = make_engine(policy)
+                    sess = sessions_for(n, workload=wl, seed=seed)
+                    rep = eng.run(sess, thr)
+                    rows.append((wl, n, rep))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(concurrencies=(3, 6) if quick else (3, 4, 5, 6),
+               workloads=("react",) if quick else ("react", "plan_execute"))
+    print("fig5: workload,concurrency," + ServingReport.HEADER)
+    for wl, n, rep in rows:
+        print(f"fig5,{wl},{n},{rep.row()}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig 6 reproduction: session-level SLO attainment (joint TTFT+TPOT
+criterion, §IV-C) under varying concurrency."""
+from __future__ import annotations
+
+from benchmarks.common import calibrated_thresholds, make_engine, sessions_for
+
+POLICIES_ORDER = ("agentserve", "pd_static", "chunked", "fcfs")
+
+
+def run(concurrencies=(3, 4, 5, 6), seed: int = 0):
+    thr = calibrated_thresholds()
+    rows = []
+    for n in concurrencies:
+        for policy in POLICIES_ORDER:
+            eng = make_engine(policy)
+            rep = eng.run(sessions_for(n, seed=seed), thr)
+            rows.append((n, policy, rep.slo_attainment))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run((3, 6) if quick else (3, 4, 5, 6))
+    print("fig6: concurrency,policy,slo_attainment")
+    for n, policy, slo in rows:
+        print(f"fig6,{n},{policy},{slo:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

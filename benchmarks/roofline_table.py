@@ -1,0 +1,51 @@
+"""§Roofline: the three-term roofline per (arch x shape x mesh), read
+from the dry-run artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import Roofline
+from repro.configs.base import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_rooflines(mesh: str = "pod16x16"):
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            p = DRYRUN_DIR / f"{arch}_{shape}_{mesh}.json"
+            if not p.exists():
+                cfg = get_config(arch)
+                if not cfg.supports_shape(shape):
+                    rows.append((arch, shape, "SKIP",
+                                 "encoder-only: no decode phase"))
+                continue
+            d = json.loads(p.read_text())
+            if not d["ok"]:
+                rows.append((arch, shape, "FAIL", d["error"][:80]))
+                continue
+            r = Roofline(arch=arch, shape=shape, mesh=mesh,
+                         chips=d["chips"], hlo_flops=d["flops"],
+                         hlo_bytes=d["bytes_accessed"],
+                         collective_bytes=d["collective_bytes"] / d["chips"],
+                         model_flops=d["model_flops"])
+            mem_gb = (d.get("memory") or {}).get(
+                "total_per_device_bytes", 0) / 1e9
+            rows.append((arch, shape, r, mem_gb))
+    return rows
+
+
+def main(mesh: str = "pod16x16"):
+    print("roofline: " + Roofline.HEADER + ",mem_gb_per_device")
+    for row in load_rooflines(mesh):
+        if isinstance(row[2], str):
+            print(f"roofline,{row[0]},{row[1]},{row[2]},{row[3]}")
+        else:
+            print(f"roofline,{row[2].row()},{row[3]:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

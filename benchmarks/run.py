@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Prints ``name,...`` CSV rows per benchmark (contract format).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = ["table1", "fig3", "fig2", "fig7", "fig5", "fig6",
+           "competitive", "roofline"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced concurrency sweep")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    t0 = time.time()
+    if "table1" in only:
+        from benchmarks import table1_tokens
+        table1_tokens.main()
+    if "fig3" in only:
+        from benchmarks import fig3_share_curves
+        fig3_share_curves.main()
+    if "fig2" in only:
+        from benchmarks import fig2_tpot_spikes
+        fig2_tpot_spikes.main()
+    if "fig7" in only:
+        from benchmarks import fig7_ablation
+        fig7_ablation.main()
+    if "fig5" in only:
+        from benchmarks import fig5_serving
+        fig5_serving.main(quick=args.quick)
+    if "fig6" in only:
+        from benchmarks import fig6_slo
+        fig6_slo.main(quick=args.quick)
+    if "competitive" in only:
+        from benchmarks import competitive_ratio
+        competitive_ratio.main()
+    if "roofline" in only:
+        from benchmarks import roofline_table
+        roofline_table.main()
+    print(f"benchmarks complete in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

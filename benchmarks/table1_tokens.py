@@ -1,0 +1,35 @@
+"""Table I reproduction: token distributions of the workload generator
+(cold prefill / resume prefill / decode, per paradigm) vs the paper's
+published ranges."""
+from __future__ import annotations
+
+from repro.serving.workload import table1_statistics
+
+PAPER = {
+    "react": dict(cold=(2500, 3500), resume=(30, 127, 56),
+                  decode=(27, 127, 40)),
+    "plan_execute": dict(cold=(2500, 3500), resume=(125, 421, 251),
+                         decode=(33, 141, 60)),
+}
+
+
+def main():
+    print("table1: workload,stage,min,max,mean,paper_range")
+    ok = True
+    for wl, ranges in PAPER.items():
+        stats = table1_statistics(wl, n=300)
+        for stage, key in [("cold_prefill", "cold"),
+                           ("resume_prefill", "resume"),
+                           ("decode", "decode")]:
+            s = stats[stage]
+            pr = ranges[key]
+            print(f"table1,{wl},{stage},{s['min']},{s['max']},"
+                  f"{s['mean']:.1f},{pr}")
+            if stage != "cold_prefill":
+                ok &= pr[0] <= s["min"] and s["max"] <= pr[1]
+    print(f"table1,within_paper_ranges,{ok}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Analytic FLOPs / HBM-bytes model for the roofline terms.
+
+Why analytic: our entire depth dimension lowers to ``lax.scan`` (one HLO
+``while``), and XLA's ``cost_analysis()`` counts a while body ONCE
+regardless of trip count (verified empirically — a 10-iteration scan of
+a matmul reports exactly one matmul's flops).  Correcting the aggregate
+number per nested loop is not possible from the single scalar XLA
+returns, so the roofline uses this analytic model — exact for the
+matmul-dominated terms since we authored every layer — and reports the
+XLA number alongside as ``hlo_flops_per_iter`` for transparency.
+
+Conventions: a [m,k]x[k,n] matmul is 2mkn FLOPs; backward = 2x forward;
+remat recompute adds ~1 forward (2 for the 2-level sqrt scan).  Bytes
+are *global* HBM traffic: per-device traffic summed over chips, so
+params replicated over the data axes are counted once per replica —
+that is real HBM traffic and exactly what the memory roofline term
+divides by (chips x HBM_bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import InputShape, ModelConfig, SSMConfig
+
+BF16 = 2
+
+
+@dataclasses.dataclass
+class StepCost:
+    fwd_flops: float          # one forward pass, global
+    total_flops: float        # incl. backward/remat/optimizer for train
+    hbm_bytes: float          # global HBM traffic for the step
+    detail: Dict[str, float]
+
+
+def _attn_ctx(shape: InputShape, window: int) -> float:
+    """Average attended context length per query token."""
+    if shape.kind == "decode":
+        L = shape.seq_len
+        return float(min(L, window) if window else L)
+    S = shape.seq_len
+    if window and S > 2 * window:
+        return float(window)
+    return S / 2.0
+
+
+def _layer_flops_per_token(cfg: ModelConfig, i: int, ctx: float,
+                           moe_capacity: float = 1.25) -> float:
+    d = cfg.d_model
+    f = 0.0
+    if cfg.layer_kind(i) == "attn":
+        hd, H, Hk = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+        f += 2 * d * H * hd          # wq
+        f += 2 * d * Hk * hd * 2     # wk, wv
+        f += 2 * H * hd * d          # wo
+        f += 2 * H * hd * ctx * 2    # scores + values
+    else:
+        ssm = cfg.ssm or SSMConfig()
+        d_in, N = ssm.expand * d, ssm.d_state
+        nh, hd, Q = ssm.num_heads(d), ssm.head_dim, ssm.chunk_size
+        f += 2 * d * (2 * d_in + 2 * N + nh)     # z, x, B, C, dt projections
+        f += 2 * ssm.d_conv * (d_in + 2 * N)     # depthwise convs
+        if ctx <= 1:                              # decode recurrence
+            f += 2 * nh * hd * N * 2             # state update + output
+        else:                                     # chunked SSD
+            f += 2 * Q * N                        # dots (C B^T) per token
+            f += 2 * Q * nh * hd                  # M @ x per token
+            f += 4 * nh * hd * N                  # state in/out terms
+        f += 2 * d_in * d                         # out proj
+    if cfg.d_ff:
+        n_mat = 3 if cfg.act == "swiglu" else 2
+        if cfg.layer_has_moe(i):
+            m = cfg.moe
+            f += 2 * d * m.num_experts                        # router
+            f += n_mat * 2 * d * cfg.d_ff * m.top_k * moe_capacity
+        else:
+            f += n_mat * 2 * d * cfg.d_ff
+    return f
+
+
+def step_cost(cfg: ModelConfig, shape: InputShape, *,
+              dp_size: int, fsdp: bool, window: int,
+              remat_extra: float = 2.0, kv_bytes: int = 2) -> StepCost:
+    B, S = shape.global_batch, shape.seq_len
+    is_train = shape.kind == "train"
+    tokens = B * (S if shape.kind != "decode" else 1)
+    ctx = _attn_ctx(shape, window)
+
+    layer_f = sum(_layer_flops_per_token(cfg, i, ctx)
+                  for i in range(cfg.num_layers))
+    # logits: every position for train, last position otherwise
+    logit_tokens = tokens if is_train else B
+    head_f = 2 * cfg.d_model * cfg.padded_vocab * logit_tokens
+    fwd = layer_f * tokens + head_f
+
+    params_total = cfg.param_count() * BF16
+    if is_train:
+        total = fwd * (3.0 + remat_extra)
+        total += 12.0 * cfg.param_count()        # AdamW elementwise
+    else:
+        total = fwd
+
+    # ---- HBM bytes (global) -------------------------------------------
+    replicas = 1 if fsdp else dp_size
+    passes = (3.0 + remat_extra) if is_train else 1.0
+    param_traffic = params_total * replicas * passes
+    opt_traffic = 0.0
+    if is_train:
+        # grads write/read + m/v read+write (state dtype ~ f32/bf16 ≈ 4B avg)
+        opt_traffic = cfg.param_count() * (2 * BF16 + 4 * 4) * 1.0
+    act_traffic = 6.0 * tokens * cfg.d_model * BF16 * cfg.num_layers
+    kv_traffic = 0.0
+    if shape.kind == "decode":
+        attn_layers = sum(1 for i in range(cfg.num_layers)
+                          if cfg.layer_kind(i) == "attn")
+        # int8 KV: values at 1 byte + per-(pos, head) bf16 scales
+        per_elem = kv_bytes + (2.0 / cfg.head_dim if kv_bytes == 1 else 0.0)
+        kv_traffic = (B * ctx * attn_layers
+                      * 2 * cfg.num_kv_heads * cfg.head_dim * per_elem)
+        ssm_layers = cfg.num_layers - attn_layers
+        if ssm_layers and cfg.ssm:
+            st = (cfg.ssm.num_heads(cfg.d_model)
+                  * cfg.ssm.head_dim * cfg.ssm.d_state)
+            kv_traffic += B * ssm_layers * st * 4 * 2  # f32 read+write
+    head_traffic = 2 * logit_tokens * cfg.padded_vocab * BF16 if is_train \
+        else 0.0
+
+    hbm = param_traffic + opt_traffic + act_traffic + kv_traffic + head_traffic
+    return StepCost(
+        fwd_flops=fwd, total_flops=total, hbm_bytes=hbm,
+        detail=dict(layer_flops_per_token=layer_f, head_flops=head_f,
+                    param_traffic=param_traffic, act_traffic=act_traffic,
+                    kv_traffic=kv_traffic, opt_traffic=opt_traffic))

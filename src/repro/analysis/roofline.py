@@ -1,0 +1,149 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes      / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the optimized HLO text: per-chip ring
+traffic per op is
+
+    all-reduce         2 x result bytes        (RS + AG phases)
+    all-gather         1 x result bytes
+    reduce-scatter     result bytes x group    (operand-sized send)
+    all-to-all         1 x result bytes
+    collective-permute 1 x result bytes
+
+Collectives inside ``while`` bodies (the lax.scan over layer groups)
+execute once per trip; the parser attributes a trip count to each
+non-entry computation by matching the scan length (= num_groups), which
+the caller passes in.  Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^\s]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, loop_trip_count: int = 1) -> CollectiveStats:
+    """Sum per-chip collective traffic.  Ops outside the ENTRY computation
+    are assumed to sit in the layer-group scan body and are multiplied
+    by ``loop_trip_count``."""
+    bytes_by = {}
+    count_by = {}
+    # split into computations; the ENTRY one is marked
+    chunks = re.split(r"\n(?=(?:ENTRY\s|%?\w[\w\.\-]*\s*\([^)]*\)\s*->))",
+                      hlo_text)
+    for chunk in chunks:
+        is_entry = chunk.lstrip().startswith("ENTRY")
+        mult = 1 if is_entry else loop_trip_count
+        for m in _COLL_RE.finditer(chunk):
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            b = _shape_bytes(dtype, dims)
+            if kind == "all-reduce":
+                traffic = 2 * b
+            elif kind == "reduce-scatter":
+                gm = _GROUP_RE.search(chunk[m.start():m.start() + 2000])
+                gsize = len(gm.group(1).split(",")) if gm else 2
+                gm2 = _GROUP_V2_RE.search(chunk[m.start():m.start() + 2000])
+                if gm2:
+                    gsize = int(gm2.group(2))
+                traffic = b * gsize
+            else:
+                traffic = b
+            bytes_by[kind] = bytes_by.get(kind, 0.0) + traffic * mult
+            count_by[kind] = count_by.get(kind, 0) + mult
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float          # per-chip traffic, summed over ops
+    model_flops: float               # 6*N*D (or 6*N_active*D for MoE)
+    collectives: Optional[CollectiveStats] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # collective_bytes is already per-chip ring traffic
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},{self.chips},"
+                f"{self.t_compute:.6f},{self.t_memory:.6f},"
+                f"{self.t_collective:.6f},{self.bottleneck},"
+                f"{self.useful_flops_ratio:.3f}")
+
+    HEADER = ("arch,shape,mesh,chips,t_compute_s,t_memory_s,"
+              "t_collective_s,bottleneck,useful_flops_ratio")
+
+
+def model_flops_for(cfg, shape, *, is_train: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode processes
+    one token per sequence; training includes the 2x backward (the 6x
+    already counts fwd+bwd: 2ND fwd + 4ND bwd)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    per_tok = 6 * n if is_train else 2 * n
+    return float(per_tok) * tokens

@@ -1,0 +1,22 @@
+"""HuBERT X-Large — encoder-only audio transformer (wav2vec2 arch).
+
+Source: [arXiv:2106.07447]. The conv feature extractor is a sanctioned
+stub: ``input_specs`` provides precomputed frame embeddings.
+vocab_size=504 is the masked-unit codebook size (k-means targets).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    encoder_only=True,
+    frontend="audio",
+    act="gelu",
+    source="arXiv:2106.07447",
+)

@@ -1,0 +1,22 @@
+"""Qwen2-VL-7B — VLM decoder with M-RoPE; vision tower is a sanctioned stub.
+
+Source: [arXiv:2409.12191]. ``input_specs`` provides precomputed patch
+embeddings; this config is the language/decoder backbone.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    source="arXiv:2409.12191",
+)

@@ -1,0 +1,12 @@
+"""AgentServe core: the paper's primary contribution.
+
+Phase-aware classification (phases.py), TPOT-driven feedback scheduling
+(scheduler.py, Algorithm 1), pre-established discrete resource slots
+(slots.py, the CUDA Green Context analogue), dual-queue admission
+(admission.py), and the competitive-ratio analysis (competitive.py).
+"""
+from repro.core.phases import Phase, PhaseThresholds, classify  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    ControlState, SchedulerConfig, TPOTScheduler)
+from repro.core.slots import SlotManager, SlotStats  # noqa: F401
+from repro.core.admission import AdmissionQueues, Job  # noqa: F401

@@ -1,0 +1,57 @@
+"""Dual-queue request admission (paper §III-A, Orchestration Layer).
+
+Q_D holds decode jobs plus resume prefills within the current budget
+B_prefill(t); Q_P holds cold prefills and over-budget resume prefills.
+Cold prefills never enter Q_D — that is the isolation invariant the
+property tests assert.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+from repro.core.phases import Phase
+from repro.core.scheduler import TPOTScheduler
+
+
+@dataclasses.dataclass
+class Job:
+    """One schedulable unit of work."""
+    session_id: int
+    phase: Phase
+    new_len: int                 # tokens to prefill (0 for decode jobs)
+    arrival_s: float = 0.0
+    enqueued_cold: bool = False  # set if a resume was re-routed to Q_P
+
+
+class AdmissionQueues:
+    def __init__(self, scheduler: TPOTScheduler):
+        self.scheduler = scheduler
+        self.q_decode: Deque[Job] = collections.deque()   # Q_D
+        self.q_prefill: Deque[Job] = collections.deque()  # Q_P
+
+    def enqueue(self, job: Job) -> str:
+        """Algorithm 1 lines 10-15. Returns which queue the job entered."""
+        if job.phase == Phase.DECODE:
+            self.q_decode.append(job)
+            return "Q_D"
+        if (job.phase == Phase.RESUME_PREFILL
+                and self.scheduler.admit_to_decode_queue(False, job.new_len)):
+            self.q_decode.append(job)
+            return "Q_D"
+        job.enqueued_cold = job.phase == Phase.RESUME_PREFILL
+        self.q_prefill.append(job)
+        return "Q_P"
+
+    def pop_decode_batch(self, max_jobs: int) -> List[Job]:
+        out = []
+        while self.q_decode and len(out) < max_jobs:
+            out.append(self.q_decode.popleft())
+        return out
+
+    def pop_prefill(self) -> Optional[Job]:
+        return self.q_prefill.popleft() if self.q_prefill else None
+
+    def occupancy(self):
+        return len(self.q_decode), len(self.q_prefill)

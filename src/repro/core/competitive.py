@@ -1,0 +1,118 @@
+"""Competitive-ratio analysis under a decode SLO (paper §III-B).
+
+Implements, over *profiled* throughput curves (benchmarks/fig3 or the
+simulator), every object in the paper's analysis:
+
+  μ_P(R, t) = η_t μ_C(R) + (1-η_t) μ_R(R)                    (Eq. 1)
+  r_min     = 1000 / τ_max                                    (Eq. 2)
+  R*_g      = min{R ∈ G : μ_D(R) ≥ r_min}                     (Eq. 6)
+  ρ_t       ≥ (1-ε̄) μ_P(S-R*_g-δ, t) / μ_P(S-R*_g, t)        (Thm. 1)
+  ρ_t       ≥ (1-ε̄)(1 - L_P δ / μ_P(S-R*_g, t))              (Cor. 2)
+
+plus a brute-force *offline optimum* (per-interval argmax over the slot
+grid subject to the SLO) so the bound can be validated empirically:
+benchmarks/competitive_ratio.py checks  ρ_measured ≥ ρ_bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ThroughputProfile:
+    """Profiled phase throughputs on the slot grid.
+
+    levels: resource levels (monotone, e.g. [10, 20, ..., 100]);
+    mu_*:   tokens/s at each level.  Monotonicity (Assumption 1) is
+    enforced by isotonic projection at construction."""
+    levels: np.ndarray
+    mu_decode: np.ndarray
+    mu_cold: np.ndarray
+    mu_resume: np.ndarray
+
+    def __post_init__(self):
+        for name in ("mu_decode", "mu_cold", "mu_resume"):
+            setattr(self, name, np.maximum.accumulate(
+                np.asarray(getattr(self, name), dtype=float)))
+        self.levels = np.asarray(self.levels)
+
+    def mu_p(self, level: float, eta: float) -> float:
+        """μ_P(R, t) with cold fraction η_t (Eq. 1), interpolated."""
+        mc = np.interp(level, self.levels, self.mu_cold)
+        mr = np.interp(level, self.levels, self.mu_resume)
+        return eta * mc + (1.0 - eta) * mr
+
+    def mu_d(self, level: float) -> float:
+        return np.interp(level, self.levels, self.mu_decode)
+
+
+def r_min_from_slo(tpot_slo_ms: float) -> float:
+    """Eq. 2: decode steps/s needed to meet the TPOT SLO."""
+    return 1000.0 / tpot_slo_ms
+
+
+def r_star_g(profile: ThroughputProfile, r_min: float) -> int:
+    """Eq. 6: smallest slot level whose decode throughput meets the SLO.
+    Raises if the SLO is infeasible even at full allocation (Eq. 5)."""
+    feasible = profile.levels[profile.mu_decode >= r_min]
+    if len(feasible) == 0:
+        raise ValueError(
+            f"decode SLO infeasible: mu_D(S)={profile.mu_decode[-1]:.2f} "
+            f"< r_min={r_min:.2f}")
+    return int(feasible[0])
+
+
+def instantaneous_bound(profile: ThroughputProfile, *, eta: float,
+                        tpot_slo_ms: float, delta: float,
+                        eps_bar: float) -> float:
+    """Theorem 1 lower bound on ρ_t."""
+    S = float(profile.levels[-1])
+    rg = r_star_g(profile, r_min_from_slo(tpot_slo_ms))
+    num = profile.mu_p(max(S - rg - delta, 0.0), eta)
+    den = profile.mu_p(S - rg, eta)
+    if den <= 0:
+        return 1.0
+    return (1.0 - eps_bar) * num / den
+
+
+def linearized_bound(profile: ThroughputProfile, *, eta: float,
+                     tpot_slo_ms: float, delta: float,
+                     eps_bar: float) -> float:
+    """Corollary 2, with L_P estimated as the max finite-difference slope
+    of μ_P on [S - R*_g - δ, S - R*_g]."""
+    S = float(profile.levels[-1])
+    rg = r_star_g(profile, r_min_from_slo(tpot_slo_ms))
+    lo, hi = max(S - rg - delta, 0.0), S - rg
+    xs = np.linspace(lo, hi, 16)
+    ys = np.array([profile.mu_p(x, eta) for x in xs])
+    if len(xs) > 1 and xs[-1] > xs[0]:
+        lp = float(np.max(np.abs(np.diff(ys) / np.diff(xs))))
+    else:
+        lp = 0.0
+    den = profile.mu_p(hi, eta)
+    if den <= 0:
+        return 1.0 - eps_bar
+    return (1.0 - eps_bar) * max(0.0, 1.0 - lp * delta / den)
+
+
+def offline_optimum(profile: ThroughputProfile, etas: Sequence[float],
+                    tpot_slo_ms: float, dt: float = 1.0) -> float:
+    """π* (Eq. 3): per-interval best SLO-feasible prefill service.
+    By Lemma 2 the per-interval optimum allocates exactly R*_g to decode."""
+    rg = r_star_g(profile, r_min_from_slo(tpot_slo_ms))
+    S = float(profile.levels[-1])
+    return float(sum(profile.mu_p(S - rg, eta) * dt for eta in etas))
+
+
+def achieved_service(profile: ThroughputProfile, etas: Sequence[float],
+                     r_alloc: Sequence[float], eps_ctx: Sequence[float],
+                     dt: float = 1.0) -> float:
+    """Realized prefill service of a trace of (R_A(t), ε_ctx(t))."""
+    S = float(profile.levels[-1])
+    total = 0.0
+    for eta, r, eps in zip(etas, r_alloc, eps_ctx):
+        total += (1.0 - eps) * profile.mu_p(S - r, eta) * dt
+    return float(total)

@@ -1,0 +1,175 @@
+"""Path-based PartitionSpec rules for every architecture and input shape.
+
+Sharding scheme (DESIGN.md §5):
+
+* tensor parallelism over ``model`` (16-wide): attention/SSM head
+  projections, MLP + expert d_ff, vocab for embed/lm_head.
+* batch parallelism over ``data`` (+ ``pod``): training batch, decode
+  batch, prefill batch.
+* ``fsdp`` mode additionally shards the d_model dimension of every
+  matmul weight (and optimizer state) over the data(+pod) axes —
+  required for the >100B configs (Mixtral-8x22B, Jamba-1.5-Large) whose
+  replicated-over-data parameters would not fit HBM.
+* decode caches: KV batch over data(+pod); head_dim over ``model``
+  (kv-head counts of the assigned archs — 2..16 — do not divide the
+  16-wide model axis, head_dim always does); for long_500k (batch=1) the
+  cache *sequence* is sharded over data instead (flash-decode-style
+  sequence parallelism).
+
+All specs are returned as pytrees of ``PartitionSpec`` matching the
+params/cache trees, suitable for ``NamedSharding(mesh, spec)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = False          # shard d_model dims over data(+pod)
+    seq_shard_long: bool = True  # long_500k: shard cache seq over data
+
+
+def auto_policy(cfg: ModelConfig) -> ShardingPolicy:
+    """fsdp once replicated-over-data optimizer state would dominate HBM
+    (~>4B params: f32 m+v replicated over 16-wide data would be >2 GB)."""
+    return ShardingPolicy(fsdp=cfg.param_count() > 4e9)
+
+
+MODEL = "model"
+
+
+def _axes(mesh: Mesh) -> Tuple:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh,
+                policy: Optional[ShardingPolicy] = None):
+    """PartitionSpec pytree matching ``init_params(cfg, ...)``."""
+    policy = policy or auto_policy(cfg)
+    F = _axes(mesh) if policy.fsdp else None
+    from repro.models import params_shape  # late import (no jax state)
+    shapes = params_shape(cfg)
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", str(k)) for k in path]
+        name = names[-1]
+        in_group = names[0] == "groups"
+        nd = len(leaf.shape)
+
+        if name == "embed":
+            return P(MODEL, F)
+        if name == "lm_head":
+            return P(F, MODEL)
+        if name in ("final_norm",):
+            return P(None)
+        # ---- grouped (stacked) leaves: axis 0 is the group axis -------
+        if name in ("norm1", "norm2"):
+            return P(None, None)
+        if names[-2] == "attn":
+            if name in ("wq", "wk", "wv"):
+                return P(None, F, MODEL)
+            if name == "wo":
+                return P(None, MODEL, F)
+        if names[-2] == "ssm":
+            if name in ("w_z", "w_x", "w_dt"):
+                return P(None, F, MODEL)
+            if name in ("w_B", "w_C"):
+                return P(None, F, None)
+            if name == "w_out":
+                return P(None, MODEL, F)
+            if name in ("conv_x_w",):
+                return P(None, None, MODEL)
+            if name in ("conv_x_b", "dt_bias", "A_log", "D", "norm"):
+                return P(None, MODEL)
+            if name in ("conv_B_w", "conv_C_w"):
+                return P(None, None, None)
+            if name in ("conv_B_b", "conv_C_b"):
+                return P(None, None)
+        if names[-2] == "ffn":
+            if name == "router":
+                return P(None, F, None)
+            if nd == 4:  # MoE experts [G, E, d, f]
+                if name == "w_down":
+                    return P(None, None, MODEL, F)
+                return P(None, None, F, MODEL)
+            if name == "w_down":
+                return P(None, MODEL, F)
+            return P(None, F, MODEL)
+        raise ValueError(f"no sharding rule for {'/'.join(names)}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                kv_quant: bool = False, seqpar: bool = False):
+    """PartitionSpec pytree matching ``init_cache`` for a decode shape.
+
+    ``seqpar``: the shard_map sequence-parallel flash-decode owns the dp
+    axes for the cache sequence dim and replicates head_dim (its LSE
+    merge needs full-hd partial accumulators)."""
+    dp = _axes(mesh)
+    long_ctx = shape.global_batch < 8      # long_500k: batch unshardable
+    from repro.models import cache_shape
+    shapes = cache_shape(cfg, shape.global_batch, shape.seq_len,
+                         kv_quant=kv_quant)
+
+    all_axes = tuple(mesh.axis_names)
+
+    def spec_for(path, leaf) -> P:
+        name = getattr(path[-1], "key", str(path[-1]))
+        if name in ("k", "v", "ks", "vs"):  # [G, B, S, Hk, hd|1]
+            if seqpar:
+                if not long_ctx:
+                    # decode_32k: batch over data(+pod), seq over model
+                    return P(None, dp, MODEL, None, None)
+                # long_500k: sequence sharded over the WHOLE mesh — the
+                # model axis carries no decode-layer role at batch 1, so
+                # it joins the flash-decode seq-parallel axis (§Perf 2c)
+                return P(None, None, all_axes, None, None)
+            hd_ax = None if name in ("ks", "vs") else MODEL
+            if long_ctx:
+                return P(None, None, dp, None, hd_ax)
+            return P(None, dp, None, None, hd_ax)
+        if name in ("conv_x",):            # [G, B, w, d_in]
+            return P(None, None if long_ctx else dp, None, MODEL)
+        if name in ("conv_B", "conv_C"):
+            return P(None, None if long_ctx else dp, None, None)
+        if name == "ssd":                  # [G, B, nh, hd, N]
+            return P(None, None if long_ctx else dp, MODEL, None, None)
+        raise ValueError(f"no cache rule for {name}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    """Specs for the step-function data inputs."""
+    dp = _axes(mesh)
+    if shape.kind == "train" or shape.kind == "prefill":
+        tok = P(dp, None)
+        emb = P(dp, None, None)
+        return {"tokens": tok, "embeds": emb, "labels": tok}
+    # decode: tokens [B], lengths [B]
+    if shape.global_batch < 8:
+        return {"tokens": P(None), "lengths": P(None)}
+    return {"tokens": P(dp), "lengths": P(dp)}
+
+
+def opt_state_specs(pspecs):
+    """Optimizer state mirrors parameter sharding; step is replicated."""
+    from repro.training.optimizer import OptState
+    return OptState(step=P(), m=pspecs, v=pspecs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+The decode hot loop is memory-bound (it must stream the KV cache from
+HBM once); the kernel therefore tiles the cache sequence dimension into
+``block_k`` VMEM tiles on the innermost sequential grid axis and keeps
+the online-softmax state for all ``G = H / Hk`` query heads of one KV
+head in VMEM scratch — the [G, hd] accumulator never round-trips to HBM.
+
+Per-sequence valid lengths arrive via scalar prefetch
+(``PrefetchScalarGridSpec``): they are needed *before* the tile loop to
+mask cache padding, exactly the role scalar prefetch plays on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   block_k: int, num_kv_blocks: int, scale: float):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = ik * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [G, bk]
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_bhgd(
+    q, k_cache, v_cache, lengths, *, block_k: int = 2048,
+    interpret: bool = False,
+):
+    """q: [B, Hk, G, hd]; caches: [B, Hk, S, hd]; lengths: [B] (tokens
+    valid in the cache, including the current one) -> [B, Hk, G, hd]."""
+    B, Hk, G, hd = q.shape
+    S = k_cache.shape[2]
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, num_kv_blocks=nk, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hk, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

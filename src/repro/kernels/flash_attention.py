@@ -1,0 +1,125 @@
+"""Pallas TPU flash-attention (prefill/train) kernel.
+
+Design for the TPU memory hierarchy (DESIGN.md §2): queries are tiled
+into ``block_q``-row VMEM tiles, the KV sequence is streamed through
+VMEM in ``block_k`` tiles along the innermost (sequential) grid
+dimension, and the online-softmax accumulators (m, l, acc) live in VMEM
+scratch so nothing spills to HBM between KV tiles.  Block sizes default
+to 128 — MXU-aligned (128x128 systolic array) and a multiple of the
+(8, 128) float32 / (16, 128) bf16 min tile.
+
+GQA is expressed in the index maps: the K/V BlockSpecs map query-head
+``h`` to kv-head ``h // group`` so KV tiles are fetched once per kv head
+group, never repeated in HBM.
+
+Causal + sliding-window masking is computed from block-local iotas;
+fully-masked KV tiles are skipped with ``pl.when`` (the TPU grid is
+sequential, so a skipped tile costs only the (cheap) guard evaluation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, sk_valid: int, scale: float,
+                  block_q: int, block_k: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # skip tiles that are entirely masked out
+    live = k_start < sk_valid
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+        if window > 0:
+            live = jnp.logical_and(
+                live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq, bk]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < sk_valid
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+            if window > 0:
+                mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal: bool = True, window: int = 0, sk_valid: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q: [B, H, Sq, hd]; k/v: [B, Hk, Sk, hd] -> [B, H, Sq, hd].
+
+    Sq/Sk are padded to block multiples by the caller (``ops.py``);
+    ``sk_valid`` (the unpadded K length) masks the K padding, and the
+    caller slices away Q padding."""
+    B, H, Sq, hd = q.shape
+    Hk, Sk = k.shape[1], k.shape[2]
+    group = H // Hk
+    sk_valid = sk_valid or Sk
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, sk_valid=sk_valid,
+        scale=scale, block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

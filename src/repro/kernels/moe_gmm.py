@@ -1,0 +1,63 @@
+"""Pallas TPU grouped matmul for the MoE expert FFN.
+
+The MoE hot spot after dispatch is ``[E, C, d] x [E, d, f] -> [E, C, f]``
+— E independent matmuls over capacity-bounded token rows.  Tiling for
+the MXU: per grid step one (expert, C-tile, f-tile) block with the
+contraction dimension d streamed through VMEM in ``block_d`` tiles on
+the innermost sequential axis; a float32 VMEM scratch accumulates
+partial products so nothing round-trips HBM between d-tiles.
+
+Grid: (E, C/bc, f/bf, d/bd) — d innermost (sequential on TPU), so the
+[bc, bf] accumulator lives across the d loop.  Block sizes default to
+MXU-aligned 128/512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, num_d_blocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)           # [bc, bd]
+    w = w_ref[0].astype(jnp.float32)           # [bd, bf]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(di == num_d_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm_bcd(x, w, *, block_c: int = 128, block_f: int = 512,
+            block_d: int = 512, interpret: bool = False):
+    """x: [E, C, d]; w: [E, d, f] -> [E, C, f]."""
+    E, C, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(block_c, C), min(block_f, f), min(block_d, d)
+    assert C % bc == 0 and f % bf == 0 and d % bd == 0, (C, f, d)
+    grid = (E, C // bc, f // bf, d // bd)
+
+    kernel = functools.partial(_gmm_kernel, num_d_blocks=d // bd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

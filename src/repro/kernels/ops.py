@@ -1,0 +1,114 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These adapt the model-layer layout ([B, S, H, hd]) to the kernel layout,
+pad sequences to tile multiples, and select interpret mode automatically
+on non-TPU backends (the reproduction contract: TPU is the *target*,
+interpret=True validates the kernel bodies on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.decode_attention import flash_decode_bhgd
+from repro.kernels.moe_gmm import gmm_bcd
+from repro.kernels.ssd_scan import ssd_scan_bhsd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x, multiple: int, axis: int):
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, Hk, hd] -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)
+    kt = _pad_seq(k.transpose(0, 2, 1, 3), block_k, 2)
+    vt = _pad_seq(v.transpose(0, 2, 1, 3), block_k, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               sk_valid=k.shape[1],
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 2048,
+                 interpret: bool | None = None):
+    """q: [B, 1, H, hd]; caches: [B, S, Hk, hd]; lengths: [B] (valid keys
+    incl. current token) -> [B, 1, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, _, H, hd = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qg = q[:, 0].reshape(B, Hk, G, hd)
+    kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), block_k, 2)
+    vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), block_k, 2)
+    out = flash_decode_bhgd(qg, kt, vt, lengths.astype(jnp.int32),
+                            block_k=min(block_k, kt.shape[2]),
+                            interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, h0, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """SSD over a sequence, model layout.
+
+    x: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus); A: [nh] (negative);
+    Bm/Cm: [B, S, N]; h0: [B, nh, hd, N].
+    Returns (y [B, S, nh, hd], h_final)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, nh, hd = x.shape
+    xt = _pad_seq(x.transpose(0, 2, 1, 3), chunk, 2)
+    dtt = _pad_seq(dt.transpose(0, 2, 1), chunk, 2)
+    Bp = _pad_seq(Bm, chunk, 1)
+    Cp = _pad_seq(Cm, chunk, 1)
+    dtA = dtt * A[None, :, None]
+    y, h = ssd_scan_bhsd(xt, dtt, dtA, Bp, Cp, h0,
+                         chunk=min(chunk, xt.shape[2]), interpret=interpret)
+    return y[:, :, :S].transpose(0, 2, 1, 3), h
+
+
+def _pad_dims(x, multiples):
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, multiples)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_c", "block_f", "block_d", "interpret"))
+def moe_gmm(x, w, *, block_c: int = 128, block_f: int = 512,
+            block_d: int = 512, interpret: bool | None = None):
+    """Grouped expert matmul. x: [E, C, d]; w: [E, d, f] -> [E, C, f]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    E, C, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(block_c, C), min(block_f, f), min(block_d, d)
+    xp = _pad_dims(x, (1, bc, bd))
+    wp = _pad_dims(w, (1, bd, bf))
+    out = gmm_bcd(xp, wp, block_c=bc, block_f=bf, block_d=bd,
+                  interpret=interpret)
+    return out[:, :C, :f]

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately naive (full score matrices, step-by-step
+recurrences) — they are the ground truth the kernels and the blocked XLA
+paths are tested against, never the execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=None,
+                    lengths=None):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, Hk, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((B,), Sk, jnp.int32)
+    kr = jnp.repeat(k, G, axis=2)  # [B, Sk, H, hd]
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (hd ** 0.5)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None, :]          # [B, Sq]
+    k_pos = jnp.arange(Sk)[None, :]                               # [1, Sk]
+    valid = k_pos[:, None, :] < lengths[:, None, None]            # [B,Sq,Sk]
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            valid = valid & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def naive_decode_attention(q, k_cache, v_cache, lengths, *, window=0):
+    """q: [B, 1, H, hd]; caches [B, S, Hk, hd]; lengths incl. current."""
+    return naive_attention(q, k_cache, v_cache, causal=True, window=window,
+                           q_offset=lengths - 1, lengths=lengths)
+
+
+def naive_ssd(x, dt, Bm, Cm, A, D, h0=None):
+    """Step-by-step SSD recurrence (the definition, O(S) sequential).
+
+    x: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus); Bm/Cm: [B, S, N];
+    A: [nh] (negative); D: [nh].  Returns (y [B,S,nh,hd], h_final)."""
+    B_, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B_, nh, hd, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,nh,hd], [B,nh], [B,N], [B,N]
+        a = jnp.exp(dt_t * A[None, :])                       # [B, nh]
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bh,bhd,bn->bhdn", dt_t, x_t, b_t)
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def naive_gmm(x, w):
+    """Grouped expert matmul oracle: [E,C,d] x [E,d,f] -> [E,C,f]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (intra-chunk +
+state carry), the compute hot-spot of the SSM / hybrid architectures.
+
+Grid: (batch, heads, chunks) with chunks innermost (sequential on TPU),
+so the [hd, N] recurrent state for one (b, h) lives in VMEM scratch
+across the whole sequence — the inter-chunk recurrence never leaves
+VMEM.  Within a chunk the quadratic "dual form" runs on the MXU:
+three [Q, Q] / [Q, hd] / [Q, N] matmuls with Q = chunk_size (default
+128/256, MXU-aligned).
+
+B/C projections are shared across heads (ngroups=1, as in mamba2-780m):
+their BlockSpecs ignore the head grid index, so each [Q, N] tile is
+fetched once per head from the same HBM buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, dta_ref, b_ref, c_ref, h0_ref,
+                y_ref, hout_ref, h_scr, *, num_chunks: int, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # [Q, hd]
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)  # [Q]
+    dta = dta_ref[0, 0, :, 0].astype(jnp.float32)
+    Bm = b_ref[0].astype(jnp.float32)            # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)            # [Q, N]
+
+    s = jnp.cumsum(dta)                          # [Q]
+    # intra-chunk quadratic (dual/attention-like) term
+    dots = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(s[:, None] - s[None, :]), 0.0)
+    M = dots * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # [Q, hd]
+    # carried-in state contribution: C_i . H_in * exp(s_i)
+    h_in = h_scr[...]                                               # [hd, N]
+    y += jnp.exp(s)[:, None] * jax.lax.dot_general(
+        Cm, h_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # end-of-chunk state
+    w = jnp.exp(s[-1] - s) * dt                                     # [Q]
+    h_new = h_in * jnp.exp(s[-1]) + jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                         # [hd, N]
+    h_scr[...] = h_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan_bhsd(
+    x, dt, dtA, Bm, Cm, h0, *, chunk: int = 128, interpret: bool = False,
+):
+    """Chunked SSD scan.
+
+    x:   [B, nh, S, hd]      per-head inputs (post-conv, f32/bf16)
+    dt:  [B, nh, S]          post-softplus step sizes
+    dtA: [B, nh, S]          dt * A  (A negative)
+    Bm:  [B, S, N]           input projection (shared across heads)
+    Cm:  [B, S, N]           output projection (shared across heads)
+    h0:  [B, nh, hd, N]      carried-in state
+    Returns (y [B, nh, S, hd], h_final [B, nh, hd, N]).  S % chunk == 0.
+    """
+    B, nh, S, hd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    dt4 = dt[..., None]   # [B, nh, S, 1]
+    dta4 = dtA[..., None]
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc, chunk=chunk)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ic: (b, ic, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, S, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt4, dta4, Bm, Cm, h0)
+    return y, h_final

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, capture memory/cost analysis and the roofline
+terms.  MUST be run as a module: PYTHONPATH=src python -m repro.launch.dryrun
+
+The XLA_FLAGS line above precedes every other import because JAX locks
+the device count at first backend initialisation (dry-run contract §0).
+
+Step functions per shape kind:
+  train_4k     -> full train_step (loss + grads + AdamW update)
+  prefill_32k  -> forward_cold (cold-prefill serving step, last logits)
+  decode_32k   -> forward_decode against a seq_len KV cache (1 new token)
+  long_500k    -> forward_decode; SSM/hybrid native, SWA window for the
+                  dense archs (DESIGN.md §4), skip for encoder-only.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.flops_model import step_cost
+from repro.analysis.roofline import (Roofline, model_flops_for,
+                                     parse_collectives)
+from repro.configs.base import (ASSIGNED_ARCHS, INPUT_SHAPES, InputShape,
+                                ModelConfig, get_config)
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import (cache_shape, forward_cold, forward_decode,
+                          group_layout, params_shape)
+from repro.training.optimizer import AdamWConfig, OptState
+from repro.training.train_step import make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# bf16 optimizer state for the giants so train_4k fits HBM (DESIGN.md §5)
+BF16_OPT_ARCHS = {"mixtral-8x22b", "jamba-1.5-large-398b"}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this shape —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend != "none":
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return batch
+    return {"tokens": jax.ShapeDtypeStruct((B,), i32),
+            "lengths": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    ok: bool
+    compile_s: float = 0.0
+    error: str = ""
+    memory: Optional[dict] = None
+    flops: float = 0.0              # analytic (scan-aware) global FLOPs
+    bytes_accessed: float = 0.0     # analytic global HBM bytes
+    hlo_flops_per_iter: float = 0.0  # raw cost_analysis (body counted once)
+    hlo_bytes_per_iter: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: Optional[dict] = None
+    model_flops: float = 0.0
+    skipped: bool = False
+    skip_reason: str = ""
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16,
+               kv_quant: bool = False, seqpar: bool = False):
+    """Returns (jitted_fn, example_args_as_structs).
+
+    ``kv_quant``/``seqpar``: the §Perf hillclimb variants (int8 KV cache;
+    shard_map sequence-parallel flash decode)."""
+    policy = shd.auto_policy(cfg)
+    pspecs = shd.param_specs(cfg, mesh, policy)
+    bspecs = shd.batch_specs(cfg, mesh, shape)
+    params_s = params_shape(cfg, dtype)
+    batch_s = input_specs(cfg, shape, dtype)
+    # MoE dispatch runs shard-local over the data(+pod) axes
+    dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                      if a in ("pod", "data")]))
+    tokens_total = shape.global_batch * (shape.seq_len
+                                         if shape.kind != "decode" else 1)
+    moe_shards = dp if tokens_total % dp == 0 else 1
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=jnp.bfloat16 if cfg.name in BF16_OPT_ARCHS
+            else jnp.float32)
+        n_params = cfg.param_count()
+        microbatches = 8 if n_params > 5e10 else (2 if n_params > 2e9 else 1)
+        step = make_train_step(cfg, opt_cfg, moe_mode="gmm", remat=True,
+                               moe_shards=moe_shards, ce_chunk=512,
+                               microbatches=microbatches)
+        ospecs = shd.opt_state_specs(pspecs)
+        opt_s = OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, opt_cfg.state_dtype), params_s),
+            v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, opt_cfg.state_dtype), params_s))
+        in_shardings = (shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                        {k: shd.named(mesh, bspecs[k]) for k in batch_s})
+        out_shardings = (shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                         None)
+        fn = jax.jit(step, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(0, 1))
+        return fn, (params_s, opt_s, batch_s)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return forward_cold(params, cfg, batch.get("tokens"),
+                                embeds=batch.get("embeds"), moe_mode="gmm",
+                                moe_shards=moe_shards)
+        in_shardings = (shd.named(mesh, pspecs),
+                        {k: shd.named(mesh, bspecs[k]) for k in batch_s})
+        fn = jax.jit(prefill_step, in_shardings=in_shardings)
+        return fn, (params_s, batch_s)
+
+    # decode
+    window = cfg.attention_window_for(shape.name)
+    seqpar = seqpar and cfg.num_heads > 0
+    cspecs = shd.cache_specs(cfg, mesh, shape, kv_quant=kv_quant,
+                             seqpar=seqpar)
+    cache_s = _struct(cache_shape(cfg, shape.global_batch, shape.seq_len,
+                                  dtype, kv_quant=kv_quant))
+
+    from repro.distributed.context import SPMDContext
+    seq_ctx = None
+    if seqpar:
+        if shape.global_batch < 8:     # long_500k: whole mesh = seq axis
+            seq_ctx = SPMDContext(mesh=mesh,
+                                  dp_axes=tuple(mesh.axis_names),
+                                  tp_axis="model")
+        else:                          # decode_32k: batch dp, seq model
+            ba = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            seq_ctx = SPMDContext(mesh=mesh, dp_axes=("model",),
+                                  tp_axis="model", batch_axes=ba)
+
+    def decode_step(params, cache, tokens, lengths):
+        logits, new_cache, new_len = forward_decode(
+            params, cfg, tokens, cache, lengths, moe_mode="gmm",
+            moe_shards=moe_shards, seq_parallel=seq_ctx,
+            window_override=window if window else None)
+        return logits, new_cache, new_len
+
+    in_shardings = (shd.named(mesh, pspecs), shd.named(mesh, cspecs),
+                    shd.named(mesh, bspecs["tokens"]),
+                    shd.named(mesh, bspecs["lengths"]))
+    out_shardings = (None, shd.named(mesh, cspecs), None)
+    fn = jax.jit(decode_step, in_shardings=in_shardings,
+                 out_shardings=out_shardings, donate_argnums=(1,))
+    return fn, (params_s, cache_s, batch_s["tokens"], batch_s["lengths"])
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            dtype=jnp.bfloat16, save: bool = True, verbose: bool = True,
+            kv_quant: bool = False, seqpar: bool = False,
+            tag: str = "") -> DryrunResult:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+
+    if not cfg.supports_shape(shape_name):
+        reason = ("encoder-only architecture has no decode phase"
+                  if cfg.encoder_only else "unsupported")
+        return DryrunResult(arch, shape_name, mesh_name, chips, ok=True,
+                            skipped=True, skip_reason=reason)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    res = DryrunResult(arch, shape_name, mesh_name, chips, ok=False)
+    from repro.distributed.context import spmd_context, spmd_for_mesh
+    try:
+        t0 = time.time()
+        with mesh, spmd_context(spmd_for_mesh(
+                mesh, fsdp=__import__('repro.distributed.sharding',
+                                      fromlist=['auto_policy']
+                                      ).auto_policy(cfg).fsdp)):
+            fn, args = build_step(cfg, shape, mesh, dtype,
+                                  kv_quant=kv_quant, seqpar=seqpar)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+        res.memory = _memory_dict(compiled)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        res.hlo_flops_per_iter = float(cost.get("flops", 0.0))
+        res.hlo_bytes_per_iter = float(cost.get("bytes accessed", 0.0))
+        policy = shd.auto_policy(cfg)
+        dp = 32 if multi_pod else 16
+        sc = step_cost(cfg, shape, dp_size=dp, fsdp=policy.fsdp,
+                       window=cfg.attention_window_for(shape_name),
+                       kv_bytes=1 if kv_quant else 2)
+        res.flops = sc.total_flops
+        res.bytes_accessed = sc.hbm_bytes
+        G, _, _ = group_layout(cfg)
+        coll = parse_collectives(compiled.as_text(), loop_trip_count=G)
+        res.collective_bytes = coll.total_bytes
+        res.collective_detail = {"bytes": coll.bytes_by_kind,
+                                 "count": coll.count_by_kind}
+        res.model_flops = model_flops_for(cfg, shape,
+                                          is_train=shape.kind == "train")
+        res.ok = True
+        if verbose:
+            mem = res.memory.get("total_per_device_bytes", 0) / 1e9
+            print(f"[OK] {arch} x {shape_name} x {mesh_name}: "
+                  f"compile {res.compile_s:.1f}s, mem/device {mem:.2f} GB, "
+                  f"flops {res.flops:.3e}, coll {res.collective_bytes:.3e} B",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001
+        res.error = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: "
+                  f"{res.error[:300]}", flush=True)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = OUT_DIR / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+        path.write_text(json.dumps(dataclasses.asdict(res), indent=1,
+                                   default=float))
+    return res
+
+
+def roofline_from_result(res: DryrunResult, cfg: ModelConfig) -> Roofline:
+    return Roofline(arch=res.arch, shape=res.shape, mesh=res.mesh,
+                    chips=res.chips,
+                    hlo_flops=res.flops, hlo_bytes=res.bytes_accessed,
+                    collective_bytes=res.collective_bytes / res.chips,
+                    model_flops=res.model_flops)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes[args.mesh]:
+                r = run_one(arch, shape, multi_pod=mp)
+                failures += 0 if r.ok else 1
+    print(f"dryrun complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_pd_split_meshes(*, multi_pod: bool = False, decode_frac: float = 0.5):
+    """Beyond-paper spatial PD disaggregation: split the device grid into
+    a decode sub-mesh and a prefill sub-mesh (DESIGN.md §2, last row).
+    Splitting is along the data axis so each sub-mesh keeps the full
+    model-parallel dimension."""
+    import numpy as np
+    devs = np.asarray(jax.devices())
+    if multi_pod:
+        grid = devs[:512].reshape(2, 16, 16)
+        k = max(1, int(round(16 * decode_frac)))
+        dec = jax.sharding.Mesh(grid[:, :k, :], ("pod", "data", "model"))
+        pre = jax.sharding.Mesh(grid[:, k:, :], ("pod", "data", "model"))
+    else:
+        grid = devs[:256].reshape(16, 16)
+        k = max(1, int(round(16 * decode_frac)))
+        dec = jax.sharding.Mesh(grid[:k, :], ("data", "model"))
+        pre = jax.sharding.Mesh(grid[k:, :], ("data", "model"))
+    return dec, pre

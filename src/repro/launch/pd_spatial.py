@@ -1,0 +1,90 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Spatial PD disaggregation dry-run (DESIGN.md §2, last mapping row).
+
+The multi-chip extension of the paper's Green-Context idea: instead of
+partitioning one device's compute, partition the *device grid* — a
+decode sub-mesh and a prefill sub-mesh, both keeping the full
+model-parallel dimension, with the slot grid realised as discrete
+splits of the data axis (k : 16-k).  Run as
+
+    PYTHONPATH=src python -m repro.launch.pd_spatial --arch llama3.2-3b
+
+This proves (by lower+compile on both sub-meshes) that the same model
+weights can serve decode and prefill *concurrently* on disjoint chips —
+the true spatial-isolation semantics the paper gets from Green Contexts,
+which the single-chip temporal engine can only approximate.
+"""
+import argparse
+import dataclasses as _dc
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.distributed.context import spmd_context, spmd_for_mesh
+from repro.launch.dryrun import OUT_DIR, _memory_dict, build_step
+from repro.launch.mesh import make_pd_split_meshes
+
+
+def run_pd_spatial(arch: str, *, decode_frac: float = 0.5,
+                   multi_pod: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    dec_mesh, pre_mesh = make_pd_split_meshes(multi_pod=multi_pod,
+                                              decode_frac=decode_frac)
+    out = {"arch": arch, "decode_frac": decode_frac,
+           "decode_chips": dec_mesh.devices.size,
+           "prefill_chips": pre_mesh.devices.size}
+
+    # decode slice batch scales with its sub-mesh share
+    dshape = INPUT_SHAPES["decode_32k"]
+    ddp = dec_mesh.shape.get("data", 1) * dec_mesh.shape.get("pod", 1)
+    dshape = _dc.replace(dshape, global_batch=max(8 * ddp, 8))
+    pshape = INPUT_SHAPES["prefill_32k"]
+    pdp = pre_mesh.shape.get("data", 1) * pre_mesh.shape.get("pod", 1)
+    pshape = _dc.replace(pshape, global_batch=max(2 * pdp, 2))
+
+    for name, mesh, shape in [("decode", dec_mesh, dshape),
+                              ("prefill", pre_mesh, pshape)]:
+        t0 = time.time()
+        with mesh, spmd_context(spmd_for_mesh(
+                mesh, fsdp=shd.auto_policy(cfg).fsdp)):
+            fn, args = build_step(cfg, shape, mesh, jnp.bfloat16)
+            compiled = fn.lower(*args).compile()
+        mem = _memory_dict(compiled)
+        out[name] = {"ok": True, "compile_s": time.time() - t0,
+                     "batch": shape.global_batch,
+                     "mem_gb_per_device":
+                         mem.get("total_per_device_bytes", 0) / 1e9}
+        if verbose:
+            print(f"[OK] pd_spatial {arch} {name}: "
+                  f"{mesh.devices.size} chips, batch {shape.global_batch}, "
+                  f"mem/dev {out[name]['mem_gb_per_device']:.2f} GB",
+                  flush=True)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"pd_spatial_{arch}.json").write_text(
+        json.dumps(out, indent=1, default=float))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--decode-frac", type=float, default=0.5)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+    run_pd_spatial(args.arch, decode_frac=args.decode_frac,
+                   multi_pod=args.multi_pod)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Boots an AgentServe engine for the reduced variant of the selected
+architecture and serves a multi-agent ToolBench-like workload, printing
+the per-policy report (the paper's Fig-5-style output)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.metrics import ServingReport, SLOThresholds
+from repro.serving.policies import POLICIES
+from repro.serving.workload import make_workload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--policy", default="agentserve",
+                    choices=sorted(POLICIES))
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--workload", default="react",
+                    choices=["react", "plan_execute"])
+    ap.add_argument("--token-scale", type=float, default=0.125)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare", action="store_true",
+                    help="run every policy on the same workload")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(num_slots=max(args.agents + 2, 6), max_seq=1024,
+                        cycle_budget=160, granularity=16,
+                        control_interval_s=0.1)
+    policies = sorted(POLICIES) if args.compare else [args.policy]
+    print(ServingReport.HEADER)
+    for policy in policies:
+        sessions = make_workload(
+            args.agents, workload=args.workload,
+            vocab_size=cfg.vocab_size, token_scale=args.token_scale,
+            num_system_prompts=1, seed=args.seed)
+        eng = ServingEngine(cfg, params, POLICIES[policy], ecfg)
+        rep = eng.run(sessions)
+        print(rep.row(), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

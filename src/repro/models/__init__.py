@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    cache_shape, forward_cold, forward_decode, forward_prefill,
+    forward_train, group_layout, init_cache, init_params, params_shape)

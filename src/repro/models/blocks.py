@@ -1,0 +1,238 @@
+"""Layer init/apply shared by every architecture family.
+
+A *layer slot* is described statically by ``LayerSpec`` (attention vs
+SSM mixer; dense MLP vs MoE vs none).  ``repro.models.model`` stacks
+identical slot structures across repeating groups and scans over them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2
+from repro.models.attention import (
+    bidirectional_attention, blocked_attention, blocked_attention_quant,
+    decode_attention, decode_attention_seqpar, quantize_kv)
+from repro.models.common import dense_init, rms_norm, split_keys
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.moe import apply_moe, init_moe
+from repro.models.rope import apply_mrope, apply_rope, text_positions3
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str        # "attn" | "ssm"
+    ffn: str         # "mlp" | "moe" | "none"
+
+
+def layer_specs_for_group(cfg: ModelConfig, group_size: int):
+    """Static layout of one repeating group (layer i uses i % group_size)."""
+    specs = []
+    for j in range(group_size):
+        kind = cfg.layer_kind(j)
+        if cfg.d_ff == 0:
+            ffn = "none"
+        elif cfg.layer_has_moe(j):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        specs.append(LayerSpec(kind=kind, ffn=ffn))
+    return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> Dict[str, Any]:
+    kmix, kffn = split_keys(key, 2)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if spec.kind == "attn":
+        kq, kk, kv, ko = split_keys(kmix, 4)
+        hd = cfg.head_dim
+        p["attn"] = {
+            "wq": dense_init(kq, cfg.d_model, cfg.num_heads * hd, dtype),
+            "wk": dense_init(kk, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+            "wv": dense_init(kv, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+            "wo": dense_init(ko, cfg.num_heads * hd, cfg.d_model, dtype),
+        }
+    else:
+        p["ssm"] = mamba2.init_mamba2(kmix, cfg.d_model, cfg.ssm, dtype)
+    if spec.ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if spec.ffn == "moe":
+            p["ffn"] = init_moe(kffn, cfg.d_model, cfg.d_ff, cfg.moe,
+                                cfg.act, dtype)
+        else:
+            p["ffn"] = init_mlp(kffn, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, q, k, positions):
+    if cfg.encoder_only:
+        return q, k  # positional info comes from the (stub) conv frontend
+    if cfg.mrope:
+        pos3 = positions if positions.ndim == 3 else text_positions3(positions)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def _write_kv(cache_k, cache_v, k_new, v_new, offsets):
+    """Write per-batch chunks at per-batch offsets.
+
+    cache_*: [B, S_max, Hk, hd]; k_new: [B, S, Hk, hd]; offsets: [B]."""
+    def upd(c, x, o):
+        return jax.lax.dynamic_update_slice_in_dim(c, x, o, axis=0)
+    return (jax.vmap(upd)(cache_k, k_new, offsets),
+            jax.vmap(upd)(cache_v, v_new, offsets))
+
+
+def _write_kv_quant(layer_cache, k_new, v_new, offsets):
+    """Quantise new K/V tokens and write values + scales (int8 cache)."""
+    def upd(c, x, o):
+        return jax.lax.dynamic_update_slice_in_dim(c, x, o, axis=0)
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    return {
+        "k": jax.vmap(upd)(layer_cache["k"], kq, offsets),
+        "v": jax.vmap(upd)(layer_cache["v"], vq, offsets),
+        "ks": jax.vmap(upd)(layer_cache["ks"],
+                            ks.astype(layer_cache["ks"].dtype), offsets),
+        "vs": jax.vmap(upd)(layer_cache["vs"],
+                            vs.astype(layer_cache["vs"].dtype), offsets),
+    }
+
+
+def apply_attn_mixer(
+    p, x, cfg: ModelConfig, *, mode: str, positions, lengths,
+    layer_cache: Optional[Dict[str, jax.Array]], window: int,
+    block_size: int = 512, seq_parallel=None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: [B, S, d].  ``lengths`` [B]: valid tokens in cache *before* this
+    call (0 for cold prefill / train).  Returns (out, new_layer_cache)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+
+    if mode == "encode":
+        q, k = _rope(cfg, q, k, positions)
+        out = bidirectional_attention(q, k, v, lengths=None,
+                                      block_size=block_size)
+    elif mode == "train":
+        q, k = _rope(cfg, q, k, positions)
+        out = blocked_attention(q, k, v, causal=True, window=window,
+                                block_size=block_size)
+    elif mode == "prefill":
+        q, k = _rope(cfg, q, k, positions)
+        if layer_cache is not None and "ks" in layer_cache:
+            layer_cache = _write_kv_quant(layer_cache, k, v, lengths)
+            out = blocked_attention_quant(
+                q, layer_cache["k"], layer_cache["ks"],
+                layer_cache["v"], layer_cache["vs"],
+                q_offset=lengths, lengths=lengths + S,
+                causal=True, window=window, block_size=block_size)
+        elif layer_cache is not None:
+            ck, cv = _write_kv(layer_cache["k"], layer_cache["v"],
+                               k, v, lengths)
+            layer_cache = {"k": ck, "v": cv}
+            out = blocked_attention(
+                q, ck, cv, q_offset=lengths, lengths=lengths + S,
+                causal=True, window=window, block_size=block_size)
+        else:  # cold prefill without a persistent cache (train-like)
+            out = blocked_attention(q, k, v, causal=True, window=window,
+                                    block_size=block_size)
+    elif mode == "decode":
+        assert layer_cache is not None and S == 1
+        q, k = _rope(cfg, q, k, positions)
+        quantized = "ks" in layer_cache
+        if seq_parallel is not None:
+            # shard-local write happens INSIDE the seq-parallel kernel
+            if quantized:
+                kq, ksn = quantize_kv(k)
+                vq, vsn = quantize_kv(v)
+                out, ck, cv, kss, vss = decode_attention_seqpar(
+                    q, kq, vq, layer_cache["k"], layer_cache["v"],
+                    lengths + 1, seq_parallel, window=window,
+                    k_scale=layer_cache["ks"], v_scale=layer_cache["vs"],
+                    new_scales=(ksn.astype(layer_cache["ks"].dtype),
+                                vsn.astype(layer_cache["vs"].dtype)))
+                layer_cache = {"k": ck, "v": cv, "ks": kss, "vs": vss}
+            else:
+                out, ck, cv = decode_attention_seqpar(
+                    q, k, v, layer_cache["k"], layer_cache["v"],
+                    lengths + 1, seq_parallel, window=window)
+                layer_cache = {"k": ck, "v": cv}
+        else:
+            if quantized:
+                layer_cache = _write_kv_quant(layer_cache, k, v, lengths)
+                ck, cv = layer_cache["k"], layer_cache["v"]
+                scales = dict(k_scale=layer_cache["ks"],
+                              v_scale=layer_cache["vs"])
+            else:
+                ck, cv = _write_kv(layer_cache["k"], layer_cache["v"], k, v,
+                                   lengths)
+                layer_cache = {"k": ck, "v": cv}
+                scales = {}
+            out = decode_attention(q, ck, cv, lengths + 1, window=window,
+                                   **scales)
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], layer_cache
+
+
+def apply_layer(
+    lp, x, cfg: ModelConfig, spec: LayerSpec, *, mode: str, positions,
+    lengths, layer_cache, window: int, moe_mode: str, block_size: int = 512,
+    moe_capacity: float = 1.25, moe_shards: int = 1, seq_parallel=None,
+):
+    """Pre-norm residual block. Returns (x, new_layer_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mixed, layer_cache = apply_attn_mixer(
+            lp["attn"], h, cfg, mode=mode, positions=positions,
+            lengths=lengths, layer_cache=layer_cache, window=window,
+            block_size=block_size, seq_parallel=seq_parallel)
+    else:
+        state = mamba2.SSMState(**layer_cache)
+        if mode == "decode":
+            mixed, state = mamba2.apply_mamba2_step(lp["ssm"], h, state, cfg.ssm)
+        else:
+            mixed, state = mamba2.apply_mamba2_scan(lp["ssm"], h, state, cfg.ssm)
+        layer_cache = state._asdict()
+    x = x + mixed
+    if spec.ffn != "none":
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            out, aux = apply_moe(lp["ffn"], h, cfg.moe, cfg.act,
+                                 mode=moe_mode, capacity_factor=moe_capacity,
+                                 data_shards=moe_shards)
+        else:
+            out = apply_mlp(lp["ffn"], h, cfg.act)
+        x = x + out
+    return x, layer_cache, aux

@@ -1,0 +1,43 @@
+"""Shared model primitives: init helpers, norms, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "swiglu":  # handled at mlp level; gate act is silu
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,61 @@
+"""Sanctioned modality-frontend stubs (contract carve-out).
+
+[audio] (HuBERT) and [vlm] (Qwen2-VL) entries specify the transformer
+backbone only; the mel-spectrogram conv feature extractor / ViT vision
+tower are NOT implemented.  Instead these helpers produce the
+*precomputed frame/patch embeddings* of the right shape that the real
+frontends would emit, so the backbone, scheduler and dry-run exercise
+exactly the tensor interface they would see in production.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.rope import text_positions3
+
+
+def audio_frame_embeddings(cfg: ModelConfig, batch: int, frames: int,
+                           key=None, dtype=jnp.float32):
+    """Stand-in for the wav2vec2/HuBERT conv feature extractor output.
+
+    Real pipeline: 16 kHz waveform -> 7-layer conv stack -> 20 ms frames
+    of dim d_model. Here: unit-variance random frames."""
+    if key is None:
+        return jax.ShapeDtypeStruct((batch, frames, cfg.d_model), dtype)
+    return jax.random.normal(key, (batch, frames, cfg.d_model), dtype)
+
+
+def vision_patch_embeddings(cfg: ModelConfig, batch: int, patches: int,
+                            key=None, dtype=jnp.float32):
+    """Stand-in for the Qwen2-VL ViT tower + projector output."""
+    if key is None:
+        return jax.ShapeDtypeStruct((batch, patches, cfg.d_model), dtype)
+    return jax.random.normal(key, (batch, patches, cfg.d_model), dtype)
+
+
+def mrope_positions_for_image(batch: int, grid_t: int, grid_h: int,
+                              grid_w: int):
+    """M-RoPE (t, h, w) position triplets for a vision patch grid, matching
+    the Qwen2-VL convention (temporal/height/width components)."""
+    t = jnp.repeat(jnp.arange(grid_t), grid_h * grid_w)
+    h = jnp.tile(jnp.repeat(jnp.arange(grid_h), grid_w), grid_t)
+    w = jnp.tile(jnp.arange(grid_w), grid_t * grid_h)
+    pos = jnp.stack([t, h, w], axis=-1).astype(jnp.int32)  # [S, 3]
+    return jnp.broadcast_to(pos, (batch,) + pos.shape)
+
+
+def mixed_vlm_positions(batch: int, n_text_prefix: int, grid, n_text_suffix: int):
+    """Positions for [text prefix | image patches | text suffix] as in
+    Qwen2-VL: text uses degenerate triplets, image uses the 3-D grid, and
+    text after the image resumes from max(image positions) + 1."""
+    gt, gh, gw = grid
+    pre = text_positions3(jnp.broadcast_to(
+        jnp.arange(n_text_prefix, dtype=jnp.int32), (batch, n_text_prefix)))
+    img = mrope_positions_for_image(batch, gt, gh, gw) + n_text_prefix
+    start = n_text_prefix + max(gt, gh, gw)
+    suf = text_positions3(jnp.broadcast_to(
+        start + jnp.arange(n_text_suffix, dtype=jnp.int32),
+        (batch, n_text_suffix)))
+    return jnp.concatenate([pre, img, suf], axis=1)

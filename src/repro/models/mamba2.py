@@ -1,0 +1,209 @@
+"""Mamba-2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+Recurrence (per head h, scalar decay):
+    a_t = exp(dt_t * A_h)                       (A_h < 0)
+    H_t = a_t * H_{t-1} + dt_t * x_t (x) B_t    (H: [hd, N])
+    y_t = H_t . C_t + D_h * x_t
+
+Training/prefill uses the chunked SSD algorithm: a ``lax.scan`` over
+chunks carries the inter-chunk state; inside a chunk the quadratic
+"attention-like" form computes the diagonal block.  Peak memory is
+O(B * Q^2 * nh) per chunk, not O(S^2).
+
+Decode is the O(1)-per-token recurrence against the carried (conv,
+ssd-state) cache — this is why SSM/hybrid archs run long_500k natively.
+
+B and C are shared across heads (ngroups=1), matching mamba2-780m.
+Weights are kept as separate projections (w_z/w_x/w_B/w_C/w_dt) instead
+of one fused in_proj so each piece can carry its own PartitionSpec
+(heads sharded over 'model', B/C replicated) — functionally identical.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm, split_keys
+from repro.configs.base import SSMConfig
+
+
+class SSMState(NamedTuple):
+    """Rolling conv inputs are kept as three separate streams so each can
+    carry its own PartitionSpec (x: heads sharded over 'model'; B/C:
+    replicated) — a mixed-sharding concat would force resharding."""
+    conv_x: jax.Array  # [B, d_conv-1, d_in]
+    conv_B: jax.Array  # [B, d_conv-1, N]
+    conv_C: jax.Array  # [B, d_conv-1, N]
+    ssd: jax.Array     # [B, nh, hd, N] recurrent state (float32)
+
+
+def init_mamba2(key, d_model: int, ssm: SSMConfig, dtype):
+    d_in = ssm.expand * d_model
+    nh = ssm.num_heads(d_model)
+    N = ssm.d_state
+    kz, kx, kb, kc, kdt, kcx, kcb, kcc, ko, ka = split_keys(key, 10)
+    return {
+        "w_z": dense_init(kz, d_model, d_in, dtype),
+        "w_x": dense_init(kx, d_model, d_in, dtype),
+        "w_B": dense_init(kb, d_model, N, dtype),
+        "w_C": dense_init(kc, d_model, N, dtype),
+        "w_dt": dense_init(kdt, d_model, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_x_w": (jax.random.normal(kcx, (ssm.d_conv, d_in)) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B_w": (jax.random.normal(kcb, (ssm.d_conv, N)) * 0.1).astype(dtype),
+        "conv_B_b": jnp.zeros((N,), dtype),
+        "conv_C_w": (jax.random.normal(kcc, (ssm.d_conv, N)) * 0.1).astype(dtype),
+        "conv_C_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ka, (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ko, d_in, d_model, dtype),
+    }
+
+
+def init_ssm_state(batch: int, d_model: int, ssm: SSMConfig, dtype) -> SSMState:
+    d_in = ssm.expand * d_model
+    nh = ssm.num_heads(d_model)
+    return SSMState(
+        conv_x=jnp.zeros((batch, ssm.d_conv - 1, d_in), dtype),
+        conv_B=jnp.zeros((batch, ssm.d_conv - 1, ssm.d_state), dtype),
+        conv_C=jnp.zeros((batch, ssm.d_conv - 1, ssm.d_state), dtype),
+        ssd=jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(seq, conv_state, w, b):
+    """seq: [B, S, ch]; conv_state: [B, d_conv-1, ch] (history)."""
+    d_conv = w.shape[0]
+    full = jnp.concatenate([conv_state, seq], axis=1)
+    new_state = full[:, full.shape[1] - (d_conv - 1):, :]
+    # depthwise causal conv: y_t = sum_j w_j * x_{t-d_conv+1+j}
+    S = seq.shape[1]
+    out = sum(
+        full[:, j: j + S, :] * w[j][None, None, :] for j in range(d_conv)
+    ) + b[None, None, :]
+    return jax.nn.silu(out), new_state
+
+
+def _split_proj(params, u):
+    """u: [B, S, d_model] -> z, x, Bm, Cm, dt (pre-conv, pre-activation)."""
+    z = u @ params["w_z"]
+    x = u @ params["w_x"]
+    Bm = u @ params["w_B"]
+    Cm = u @ params["w_C"]
+    dt = (u @ params["w_dt"]).astype(jnp.float32)
+    return z, x, Bm, Cm, dt
+
+
+def apply_mamba2_scan(
+    params, u, state: SSMState, ssm: SSMConfig,
+) -> Tuple[jax.Array, SSMState]:
+    """Chunked SSD over a sequence. u: [B, S, d_model] -> (y, new_state)."""
+    B_, S, d_model = u.shape
+    d_in = ssm.expand * d_model
+    nh, hd, N = ssm.num_heads(d_model), ssm.head_dim, ssm.d_state
+    Q = min(ssm.chunk_size, max(S, 1))
+
+    z, x, Bm, Cm, dt = _split_proj(params, u)
+    x, new_cx = _causal_conv(x, state.conv_x, params["conv_x_w"],
+                             params["conv_x_b"])
+    Bm, new_cb = _causal_conv(Bm, state.conv_B, params["conv_B_w"],
+                              params["conv_B_b"])
+    Cm, new_cc = _causal_conv(Cm, state.conv_C, params["conv_C_w"],
+                              params["conv_C_b"])
+
+    dt = jax.nn.softplus(dt + params["dt_bias"][None, None, :])  # [B,S,nh]
+    A = -jnp.exp(params["A_log"])                                # [nh]
+    xh = x.reshape(B_, S, nh, hd).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    # pad S to a multiple of Q
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    def chunk(xs, H_in):
+        xq, Bq, Cq, dtq = xs        # [B,Q,nh,hd], [B,Q,N], [B,Q,N], [B,Q,nh]
+        dtA = dtq * A[None, None, :]                      # [B,Q,nh]
+        s = jnp.cumsum(dtA, axis=1)                       # [B,Q,nh]
+        # intra-chunk (diagonal) term
+        dots = jnp.einsum("bin,bjn->bij", Cq, Bq)         # [B,Q,Q]
+        ii = jnp.arange(Q)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        # mask BEFORE exp: for j > i the exponent is a positive sum and
+        # exp overflows — where(c, exp(x), 0) still differentiates the
+        # exp branch and poisons the gradients with inf * 0 = NaN
+        diff = jnp.where(causal, s[:, :, None, :] - s[:, None, :, :], -jnp.inf)
+        decay = jnp.exp(diff)                             # [B,Q,Q,nh]
+        M = dots[..., None] * decay * dtq[:, None, :, :]
+        y = jnp.einsum("bijh,bjhd->bihd", M, xq)
+        # contribution of carried-in state
+        y += jnp.einsum("bin,bhdn,bih->bihd",
+                        Cq, H_in, jnp.exp(s))
+        # end-of-chunk state
+        w = jnp.exp(s[:, -1:, :] - s) * dtq               # [B,Q,nh]
+        H_intra = jnp.einsum("bjh,bjhd,bjn->bhdn", w, xq, Bq)
+        H_out = H_in * jnp.exp(s[:, -1, :])[:, :, None, None] + H_intra
+        return y, H_out
+
+    xc = xh.reshape(B_, nc, Q, nh, hd).swapaxes(0, 1)
+    Bc = Bm.reshape(B_, nc, Q, N).swapaxes(0, 1)
+    Cc = Cm.reshape(B_, nc, Q, N).swapaxes(0, 1)
+    dtc = dt.reshape(B_, nc, Q, nh).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(H, xs):
+        # rematted: the [B, Q, Q, nh] intra-chunk decay/score tensors are
+        # recomputed in the backward pass instead of being saved per chunk
+        y, H_new = chunk(xs, H)
+        return H_new, y
+
+    H_final, ys = jax.lax.scan(body, state.ssd, (xc, Bc, Cc, dtc))
+    y = ys.swapaxes(0, 1).reshape(B_, Sp, nh, hd)[:, :S]
+    y = y + xh[:, :S] * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["w_out"], SSMState(conv_x=new_cx, conv_B=new_cb,
+                                         conv_C=new_cc, ssd=H_final)
+
+
+def apply_mamba2_step(
+    params, u, state: SSMState, ssm: SSMConfig,
+) -> Tuple[jax.Array, SSMState]:
+    """Single decode step. u: [B, 1, d_model] -> (y [B,1,d_model], state)."""
+    B_, _, d_model = u.shape
+    d_in = ssm.expand * d_model
+    nh, hd, N = ssm.num_heads(d_model), ssm.head_dim, ssm.d_state
+
+    z, x, Bm, Cm, dt = _split_proj(params, u)
+    x, new_cx = _causal_conv(x, state.conv_x, params["conv_x_w"],
+                             params["conv_x_b"])
+    Bm, new_cb = _causal_conv(Bm, state.conv_B, params["conv_B_w"],
+                              params["conv_B_b"])
+    Cm, new_cc = _causal_conv(Cm, state.conv_C, params["conv_C_w"],
+                              params["conv_C_b"])
+    x, Bm, Cm = x[:, 0], Bm[:, 0], Cm[:, 0]
+
+    dt = jax.nn.softplus(dt[:, 0] + params["dt_bias"][None, :])  # [B,nh]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])                                 # [B,nh]
+    xh = x.reshape(B_, nh, hd).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    H = state.ssd * a[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xh, Bf)
+    y = jnp.einsum("bhdn,bn->bhd", H, Cm.astype(jnp.float32))
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["w_out"], SSMState(conv_x=new_cx, conv_B=new_cb,
+                                         conv_C=new_cc, ssd=H)

@@ -1,0 +1,29 @@
+"""Feed-forward layers: SwiGLU (llama-family) and GeLU (StarCoder2/HuBERT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    if act == "swiglu":
+        kg, ku, kd = split_keys(key, 3)
+        return {
+            "w_gate": dense_init(kg, d_model, d_ff, dtype),
+            "w_up": dense_init(ku, d_model, d_ff, dtype),
+            "w_down": dense_init(kd, d_ff, d_model, dtype),
+        }
+    ku, kd = split_keys(key, 2)
+    return {
+        "w_up": dense_init(ku, d_model, d_ff, dtype),
+        "w_down": dense_init(kd, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params, x, act: str):
+    if act == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]

@@ -1,0 +1,308 @@
+"""Model assembly: stacked repeating groups + ``lax.scan`` over them.
+
+All architectures are expressed as ``num_groups`` repetitions of a
+statically-described *group* of layers (``group_size`` =
+lcm(hybrid_period, moe.every), e.g. Jamba: 9 groups x 8 layers).  Per
+layer-slot parameters are stacked along a leading ``num_groups`` axis so
+the whole depth compiles as a single scanned HLO body — this keeps the
+80 dry-run compiles tractable and is also how remat is applied.
+
+Public entry points:
+  init_params / params_shape      — weights (or their ShapeDtypeStructs)
+  init_cache  / cache_shape       — decode caches (KV + SSM state)
+  forward_train                   — full causal (or encoder) forward
+  forward_prefill                 — chunk prefill writing into a cache
+  forward_decode                  — one token per active sequence
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2
+from repro.models.blocks import (LayerSpec, apply_layer, init_layer,
+                                 layer_specs_for_group)
+from repro.models.common import embed_init, rms_norm, split_keys
+
+
+def group_layout(cfg: ModelConfig) -> Tuple[int, int, Tuple[LayerSpec, ...]]:
+    period = cfg.hybrid_period or 1
+    every = cfg.moe.every if cfg.moe else 1
+    group_size = math.lcm(period, every)
+    assert cfg.num_layers % group_size == 0, (cfg.name, group_size)
+    return cfg.num_layers // group_size, group_size, layer_specs_for_group(cfg, group_size)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    G, gs, specs = group_layout(cfg)
+    k_embed, k_groups, k_head = split_keys(key, 3)
+
+    def one_group(k):
+        ks = split_keys(k, gs)
+        return {f"l{j}": init_layer(ks[j], cfg, specs[j], dtype)
+                for j in range(gs)}
+
+    gkeys = split_keys(k_groups, G)
+    groups = jax.tree.map(lambda *xs: jnp.stack(xs), *[one_group(k) for k in gkeys])
+    params = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "groups": groups,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model,
+                                       dtype).T
+    return params
+
+
+def params_shape(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.float32, kv_quant: bool = False) -> Dict[str, Any]:
+    """Decode/serving cache for one model: stacked over groups.
+    ``kv_quant``: int8 values + per-(position, head) scales (§Perf)."""
+    G, gs, specs = group_layout(cfg)
+    cache: Dict[str, Any] = {}
+    for j, spec in enumerate(specs):
+        if spec.kind == "attn":
+            shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            if kv_quant:
+                kv = jnp.zeros(shape, jnp.int8)
+                sc = jnp.zeros(shape[:-1] + (1,), dtype)
+                cache[f"l{j}"] = {"k": kv, "v": kv, "ks": sc, "vs": sc}
+                continue
+            kv = jnp.zeros(shape, dtype)
+            cache[f"l{j}"] = {"k": kv, "v": kv}
+        else:
+            st = mamba2.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+            cache[f"l{j}"] = {
+                k: jnp.zeros((G,) + v.shape, v.dtype)
+                for k, v in st._asdict().items()
+            }
+    return cache
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.float32, kv_quant: bool = False):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, dtype, kv_quant))
+
+
+# ---------------------------------------------------------------------------
+# forward core
+# ---------------------------------------------------------------------------
+
+
+def _sqrt_divisor(n: int) -> int:
+    best = 1
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _scan_groups(params, x, cfg: ModelConfig, *, mode: str, positions,
+                 lengths, cache, window: int, moe_mode: str,
+                 remat: bool = False, block_size: int = 512,
+                 moe_capacity: float = 1.25, moe_shards: int = 1,
+                 seq_parallel=None):
+    G, gs, specs = group_layout(cfg)
+    from repro.distributed.context import current_spmd
+    spmd = current_spmd()
+    S = x.shape[1]
+    constrain = (spmd is not None and spmd.shard_activations
+                 and mode in ("train", "encode")
+                 and S % spmd.tp_size == 0 and S > 1)
+
+    def body(carry, xs):
+        h, aux = carry
+        gparams, gcache = xs
+        new_gcache = {} if gcache is not None else None
+        for j, spec in enumerate(specs):
+            lc = gcache.get(f"l{j}") if gcache is not None else None
+            if spec.kind == "ssm" and lc is None:
+                # train/cold path still needs a zero state to scan from
+                st = mamba2.init_ssm_state(h.shape[0], cfg.d_model, cfg.ssm,
+                                           h.dtype)
+                lc = st._asdict()
+
+            def layer_fn(lp, h_in, lc_in, _spec=spec):
+                return apply_layer(
+                    lp, h_in, cfg, _spec, mode=mode,
+                    positions=positions, lengths=lengths, layer_cache=lc_in,
+                    window=window, moe_mode=moe_mode, block_size=block_size,
+                    moe_capacity=moe_capacity, moe_shards=moe_shards,
+                    seq_parallel=seq_parallel)
+
+            if remat and gs > 1:
+                # per-layer remat within the group body: without this, a
+                # multi-layer group (Jamba: 8) keeps every layer's
+                # residuals live at once during the body's backward
+                layer_fn = jax.checkpoint(layer_fn)
+            h, lc, a = layer_fn(gparams[f"l{j}"], h, lc)
+            aux = aux + a
+            if new_gcache is not None:
+                new_gcache[f"l{j}"] = lc
+        if constrain:
+            # Megatron-style sequence parallelism for the stored carry:
+            # scan carries persist per iteration; sharding them over the
+            # tensor axis divides that storage by tp_size (the re-gather
+            # happens at the next group's attention anyway).
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            h = jax.lax.with_sharding_constraint(
+                h, NamedSharding(spmd.mesh,
+                                 P(spmd.dp_axes, spmd.tp_axis, None)))
+        return (h, aux), new_gcache
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    G1 = _sqrt_divisor(G) if (remat and cache is None) else 1
+    if G1 > 1:
+        # 2-level (sqrt-depth) remat scan: peak carry storage drops from
+        # G * |h| to (G1 + G/G1) * |h| at one extra forward recompute.
+        G2 = G // G1
+        xs2 = jax.tree.map(
+            lambda a: a.reshape((G1, G2) + a.shape[1:]), params["groups"])
+
+        def outer(carry, xs):
+            return jax.lax.scan(body, carry, xs)
+
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(outer), (x, aux0),
+                                   (xs2, None))
+        return x, aux, None
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux0),
+                                       (params["groups"], cache))
+    return x, aux, new_cache
+
+
+def _logits(params, cfg: ModelConfig, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["embed"].T if cfg.tie_embeddings
+              else h @ params["lm_head"])
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits
+
+
+def _embed(params, cfg: ModelConfig, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds
+    return params["embed"][tokens]
+
+
+# ---------------------------------------------------------------------------
+# public forwards
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+                  positions=None, moe_mode: str = "gmm", remat: bool = False,
+                  window_override: Optional[int] = None,
+                  block_size: int = 512, moe_capacity: float = 1.25,
+                  moe_shards: int = 1, return_hidden: bool = False):
+    """Full forward producing logits for every position.
+
+    ``embeds`` (instead of ``tokens``) is the sanctioned modality-stub
+    entry point for audio/VLM frontends."""
+    x = _embed(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mode = "encode" if cfg.encoder_only else "train"
+    window = cfg.sliding_window if window_override is None else window_override
+    lengths = jnp.zeros((B,), jnp.int32)
+    h, aux, _ = _scan_groups(params, x, cfg, mode=mode, positions=positions,
+                             lengths=lengths, cache=None, window=window,
+                             moe_mode=moe_mode, remat=remat,
+                             block_size=block_size, moe_capacity=moe_capacity,
+                             moe_shards=moe_shards)
+    if return_hidden:
+        return h, aux
+    return _logits(params, cfg, h), aux
+
+
+def forward_cold(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+                 moe_mode: str = "gmm", remat: bool = False,
+                 window_override: Optional[int] = None,
+                 block_size: int = 512, moe_shards: int = 1):
+    """Cold prefill without a persistent cache: full causal (or encoder)
+    forward returning ONLY the last-position logits [B, vocab] — the
+    serving TTFT path, and the prefill_32k dry-run step (materialising
+    [B, S, vocab] logits at 32k would not fit HBM)."""
+    x = _embed(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mode = "encode" if cfg.encoder_only else "train"
+    window = cfg.sliding_window if window_override is None else window_override
+    lengths = jnp.zeros((B,), jnp.int32)
+    h, aux, _ = _scan_groups(params, x, cfg, mode=mode, positions=positions,
+                             lengths=lengths, cache=None, window=window,
+                             moe_mode=moe_mode, remat=remat,
+                             block_size=block_size, moe_shards=moe_shards)
+    return _logits(params, cfg, h[:, -1:, :])[:, 0]
+
+
+def forward_prefill(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                    embeds=None, moe_mode: str = "gmm",
+                    window_override: Optional[int] = None,
+                    block_size: int = 512, moe_capacity: float = 1.25,
+                    moe_shards: int = 1, logit_idx=None):
+    """Process a chunk (cold or resume prefill), writing into ``cache``.
+
+    tokens: [B, S] appended at per-batch offsets ``lengths`` [B].
+    ``logit_idx`` [B]: position within the chunk whose logits to return
+    (defaults to the last — engines pass the last *unpadded* position).
+    Returns (logits [B, vocab], new_cache, new_lengths)."""
+    x = _embed(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    window = cfg.sliding_window if window_override is None else window_override
+    h, aux, new_cache = _scan_groups(
+        params, x, cfg, mode="prefill", positions=positions, lengths=lengths,
+        cache=cache, window=window, moe_mode=moe_mode,
+        block_size=block_size, moe_capacity=moe_capacity,
+        moe_shards=moe_shards)
+    if logit_idx is None:
+        h_last = h[:, -1:, :]
+    else:
+        h_last = jnp.take_along_axis(h, logit_idx[:, None, None], axis=1)
+    logits = _logits(params, cfg, h_last)[:, 0]
+    return logits, new_cache, lengths + S
+
+
+def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                   moe_mode: str = "gmm",
+                   window_override: Optional[int] = None,
+                   moe_capacity: float = 1.25, moe_shards: int = 1,
+                   seq_parallel=None):
+    """One decode step. tokens: [B] (last sampled token per sequence).
+
+    Returns (logits [B, vocab], new_cache, new_lengths)."""
+    x = _embed(params, cfg, tokens[:, None])
+    B = x.shape[0]
+    positions = lengths[:, None]
+    window = cfg.sliding_window if window_override is None else window_override
+    h, aux, new_cache = _scan_groups(
+        params, x, cfg, mode="decode", positions=positions, lengths=lengths,
+        cache=cache, window=window, moe_mode=moe_mode,
+        moe_capacity=moe_capacity, moe_shards=moe_shards,
+        seq_parallel=seq_parallel)
+    logits = _logits(params, cfg, h[:, 0, :])
+    return logits, new_cache, lengths + 1

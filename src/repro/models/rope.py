@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim/2 rotary frequencies into
+three sections (temporal, height, width) and rotates each section by the
+corresponding position component.  For pure-text tokens all three
+components are equal, which makes M-RoPE coincide with 1-D RoPE — the
+property the smoke tests assert.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies, shape [head_dim//2] (float32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, cos, sin):
+    # x: [..., head_dim]; cos/sin: [..., head_dim//2]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] int32."""
+    inv = rope_freqs(x.shape[-1], theta)  # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """M-RoPE. x: [B, S, H, hd]; positions3: [B, S, 3] (t, h, w) int32;
+    sections: 3 ints summing to hd//2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta)  # [half]
+    # pick position component per frequency index
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions3.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # [B, S, half]
+    ang = pos * inv
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_positions3(positions):
+    """Expand 1-D positions to degenerate (t,h,w) triplets for text."""
+    return jnp.stack([positions, positions, positions], axis=-1)

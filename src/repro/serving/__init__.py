@@ -1,0 +1,5 @@
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.kvcache import KVCachePool  # noqa: F401
+from repro.serving.metrics import ServingReport, SLOThresholds  # noqa: F401
+from repro.serving.policies import POLICIES, PolicySpec  # noqa: F401
+from repro.serving.workload import make_workload  # noqa: F401

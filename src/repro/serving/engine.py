@@ -1,0 +1,448 @@
+"""The AgentServe single-engine serving loop.
+
+Execution model (DESIGN.md §2 — the TPU/JAX adaptation of the paper's
+Execution Layer): the engine advances in *cycles*.  Each cycle runs at
+most one batched decode step (all active sequences — continuous
+batching) and an amount of prefill work bounded by the current slot
+partition: the decode reservation R(t) of the cycle token budget C
+protects decode cadence, and the complement (C - R) is the cold-prefill
+chunk processed that cycle.  Resume prefills within B_prefill(t) are
+fused into the decode stream (Q_D); cold prefills only ever run from
+the prefill stream (Q_P) — the isolation invariant.
+
+TPOT mapping: on GPU, shrinking decode's SM share inflates the decode
+kernel's own latency; in the temporal adaptation the decode kernel time
+is constant but the *inter-emission gap* (cycle time) grows with the
+co-scheduled prefill chunk.  The scheduler therefore measures TPOT as
+the gap between consecutive decode-step completions — the quantity the
+user actually experiences (and what Fig 2 plots).
+
+Slot semantics: ``SlotManager`` holds pre-compiled prefill executables
+keyed by decode-reservation level; binding level R dispatches the
+(C - R)-token chunk executable.  With ``preestablish=False`` (the
+No-Green ablation) the executable is rebuilt on demand inside the
+serving path, reproducing the paper's on-demand-allocation cost.
+
+Executable shapes are always drawn from the pre-established grid (slot
+chunks + power-of-two resume buckets); shorter real work is padded to
+the executable's shape and masked — shape-stable dispatch is precisely
+the Green-Context-analogue discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.admission import AdmissionQueues, Job
+from repro.core.phases import Phase, PhaseThresholds, classify
+from repro.core.scheduler import SchedulerConfig, TPOTScheduler
+from repro.core.slots import SlotManager
+from repro.models import forward_decode, forward_prefill
+from repro.serving.kvcache import KVCachePool
+from repro.serving.metrics import ServingReport, SLOThresholds, build_report
+from repro.serving.policies import PolicySpec
+from repro.serving.request import Session, SessionState
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 8
+    max_seq: int = 1024
+    cycle_budget: int = 320          # C: tokens of work per cycle
+    granularity: int = 32            # g: slot granularity (C/g = 10 slots)
+    moe_mode: str = "dense"          # tiny models on CPU: dense is faster
+    control_interval_s: float = 0.25
+    tpot_slo_ms: float = 50.0
+    b_min: int = 32
+    b_max: int = 512
+    b_init: int = 128
+    delta_b: int = 32
+    max_wall_s: float = 300.0
+
+
+def _resume_buckets(cfg: EngineConfig) -> List[int]:
+    out, b = [], cfg.granularity
+    while b < cfg.b_max:
+        out.append(b)
+        b *= 2
+    out.append(cfg.b_max)
+    return out
+
+
+# Shared across engine instances for the same (model, shapes): baselines
+# and AgentServe then dispatch the *same* compiled code, isolating the
+# scheduling policy as the only varying factor.
+_EXEC_CACHE: Dict[Tuple, Tuple[Callable, Callable]] = {}
+
+
+def _raw_fns(mcfg: ModelConfig, moe_mode: str):
+    def decode_step(params, cache, tokens, lengths):
+        logits, new_cache, _ = forward_decode(
+            params, mcfg, tokens, cache, lengths, moe_mode=moe_mode)
+        return logits, new_cache
+
+    def prefill_step(params, cache, tokens, slot, length, logit_idx):
+        sub = jax.tree.map(
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+            cache)
+        logits, sub2, _ = forward_prefill(
+            params, mcfg, tokens, sub, length[None],
+            moe_mode=moe_mode, logit_idx=logit_idx[None])
+        new_cache = jax.tree.map(
+            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                full, s, slot, axis=1),
+            cache, sub2)
+        return logits[0], new_cache
+
+    return decode_step, prefill_step
+
+
+def get_executables(mcfg: ModelConfig, num_slots: int, max_seq: int,
+                    moe_mode: str):
+    key = (mcfg, num_slots, max_seq, moe_mode)
+    if key not in _EXEC_CACHE:
+        d, p = _raw_fns(mcfg, moe_mode)
+        _EXEC_CACHE[key] = (jax.jit(d), jax.jit(p))
+    return _EXEC_CACHE[key]
+
+
+class ServingEngine:
+    def __init__(self, model_cfg: ModelConfig, params, policy: PolicySpec,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 dtype=jnp.float32):
+        self.mcfg = model_cfg
+        self.params = params
+        self.policy = policy
+        self.ecfg = engine_cfg or EngineConfig()
+        self.pool = KVCachePool(model_cfg, self.ecfg.num_slots,
+                                self.ecfg.max_seq, dtype)
+        C, g = self.ecfg.cycle_budget, self.ecfg.granularity
+        self.scheduler = TPOTScheduler(SchedulerConfig(
+            total_resources=C, r_base=g, r_init=2 * g, delta_r=g,
+            b_min=self.ecfg.b_min, b_max=self.ecfg.b_max,
+            b_init=self.ecfg.b_init, delta_b=self.ecfg.delta_b,
+            tpot_slo_ms=self.ecfg.tpot_slo_ms,
+            control_interval_s=self.ecfg.control_interval_s))
+        self.queues = AdmissionQueues(self.scheduler)
+        self.thresholds = PhaseThresholds(resume_max_new=self.ecfg.b_max)
+
+        self._decode_fn, self._prefill_fn = get_executables(
+            model_cfg, self.ecfg.num_slots, self.ecfg.max_seq,
+            self.ecfg.moe_mode)
+        self.slots = SlotManager(
+            C, g, self._build_slot, preestablish=policy.preestablish)
+        self._warm_shared()
+
+        # run-state
+        self._t0 = time.perf_counter()
+        self._last_decode_end: Optional[float] = None
+        self.trace: List[Dict] = []       # per-cycle telemetry (Fig 2)
+
+    # ------------------------------------------------------------------
+    # executables & warmup
+    # ------------------------------------------------------------------
+    def _build_slot(self, level: int):
+        """Slot executable for decode-reservation ``level``: the prefill
+        chunk is C - level tokens.  Pre-establishing == compiling now;
+        the No-Green path lands this cost inside the serving loop."""
+        chunk = self.ecfg.cycle_budget - level
+        if chunk <= 0:
+            return {"chunk": 0, "fn": None}
+        if self.policy.preestablish:
+            fn = self._prefill_fn
+        else:
+            _, raw_p = _raw_fns(self.mcfg, self.ecfg.moe_mode)
+            fn = jax.jit(raw_p)          # fresh cache -> real recompile
+        self._warm_prefill(fn, chunk)
+        return {"chunk": chunk, "fn": fn}
+
+    def _warm_prefill(self, fn, chunk: int) -> None:
+        toks = jnp.zeros((1, chunk), jnp.int32)
+        lg, _ = fn(self.params, self.pool.cache, toks,
+                   jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1))
+        jax.block_until_ready(lg)
+
+    def _warm_shared(self) -> None:
+        lg, _ = self._decode_fn(
+            self.params, self.pool.cache,
+            jnp.zeros((self.ecfg.num_slots,), jnp.int32),
+            jnp.zeros((self.ecfg.num_slots,), jnp.int32))
+        jax.block_until_ready(lg)
+        for b in _resume_buckets(self.ecfg):
+            self._warm_prefill(self._prefill_fn, b)
+        if not self.policy.chunk_by_slots and not self.policy.whole_prefill:
+            self._warm_prefill(self._prefill_fn, self._fixed_chunk())
+
+    def _fixed_chunk(self) -> int:
+        g = self.ecfg.granularity
+        c = int(self.policy.fixed_chunk_frac * self.ecfg.cycle_budget)
+        return max(g, (c // g) * g)
+
+    # ------------------------------------------------------------------
+    # work execution
+    # ------------------------------------------------------------------
+    def _run_prefill_tokens(self, sess: Session, shape_len: int,
+                            take: Optional[int] = None,
+                            fn: Optional[Callable] = None) -> None:
+        """Prefill up to ``take`` real tokens (default: fill the shape)
+        of the session's current turn in an executable of token-shape
+        ``shape_len`` — shorter work is padded and masked."""
+        take = min(take if take is not None else shape_len, shape_len,
+                   self._aligned_remaining(sess))
+        if take <= 0:
+            return
+        turn = sess.current_turn
+        toks = turn.prefill_tokens[sess.prefill_done: sess.prefill_done + take]
+        pad = shape_len - take
+        if pad:
+            toks = np.concatenate([toks, np.zeros(pad, np.int32)])
+        fn = fn or self._prefill_fn
+        logits, new_cache = fn(
+            self.params, self.pool.cache,
+            jnp.asarray(toks[None], jnp.int32),
+            jnp.int32(sess.slot), jnp.int32(self.pool.lengths[sess.slot]),
+            jnp.int32(take - 1))
+        logits = jax.block_until_ready(logits)
+        self.pool.cache = new_cache
+        self.pool.lengths[sess.slot] += take
+        sess.prefill_done += take
+        sess.cached_len = int(self.pool.lengths[sess.slot])
+
+        # prefix registration at the shared-prompt boundary (cold only)
+        if (sess.turn_idx == 0 and sess.shared_prefix_len > 0
+                and sess.cached_len == sess.shared_prefix_len
+                and sess.prefill_done == sess.shared_prefix_len):
+            self.pool.register_prefix(
+                sess.slot, turn.prefill_tokens[:sess.shared_prefix_len])
+
+        if sess.remaining_prefill == 0:
+            self._finish_prefill(sess, np.asarray(logits))
+
+    def _aligned_remaining(self, s: Session) -> int:
+        """Remaining prefill, capped at the shared-prefix boundary so the
+        prefix snapshot is taken at exactly that length."""
+        rem = s.remaining_prefill
+        if (s.turn_idx == 0 and s.prefill_done < s.shared_prefix_len
+                and s.cached_len < s.shared_prefix_len):
+            rem = min(rem, s.shared_prefix_len - s.prefill_done)
+        return rem
+
+    def _finish_prefill(self, sess: Session, last_logits: np.ndarray) -> None:
+        now = self._clock()
+        sess.last_token = int(last_logits.argmax())
+        sess.first_token_s.append(now)
+        sess.token_times_s.append(now)
+        sess.decoded = 1
+        self._after_token(sess, now)
+
+    def _decode_step(self, active: Sequence[Session]) -> None:
+        tokens = np.zeros((self.ecfg.num_slots,), np.int32)
+        mask = np.zeros((self.ecfg.num_slots,), bool)
+        for s in active:
+            tokens[s.slot] = s.last_token
+            mask[s.slot] = True
+        logits, new_cache = self._decode_fn(
+            self.params, self.pool.cache, jnp.asarray(tokens),
+            self.pool.lengths_device())
+        logits = np.asarray(jax.block_until_ready(logits))
+        self.pool.commit(new_cache, mask)
+        now = self._clock()
+        if self._last_decode_end is not None:
+            self.scheduler.record_decode_step(now - self._last_decode_end)
+        self._last_decode_end = now
+        for s in active:
+            self.pool.lengths[s.slot] += 1
+            s.cached_len = int(self.pool.lengths[s.slot])
+            s.last_token = int(logits[s.slot].argmax())
+            s.token_times_s.append(now)
+            s.decoded += 1
+            self._after_token(s, now)
+
+    def _after_token(self, sess: Session, now: float) -> None:
+        turn = sess.current_turn
+        if sess.decoded < turn.decode_len:
+            sess.state = SessionState.DECODING
+            return
+        if sess.turn_idx + 1 >= len(sess.turns):
+            sess.state = SessionState.FINISHED
+            self.pool.free(sess.slot)
+            return
+        sess.turn_idx += 1
+        sess.prefill_done = 0
+        sess.decoded = 0
+        sess.state = SessionState.TOOL_CALL
+        sess.ready_s = now + sess.turns[sess.turn_idx - 1].tool_latency_s
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _admit(self, sessions: Sequence[Session]) -> None:
+        now = self._clock()
+        for s in sessions:
+            if s.state == SessionState.WAITING_PREFILL and s.ready_s <= now:
+                if self.pool.free_slots == 0:
+                    continue  # backpressure: retry next cycle
+                s.slot = self.pool.alloc()
+                self._maybe_restore_prefix(s)
+                self._submit(s, now)
+            elif s.state == SessionState.TOOL_CALL and s.ready_s <= now:
+                self._submit(s, now)
+
+    def _maybe_restore_prefix(self, s: Session) -> None:
+        if s.shared_prefix_len <= 0:
+            return
+        entry = self.pool.lookup(
+            s.turns[0].prefill_tokens[:s.shared_prefix_len])
+        if entry is not None:
+            self.pool.restore_prefix(s.slot, entry)
+            s.cached_len = entry.length
+            s.prefill_done = entry.length
+
+    def _submit(self, s: Session, now: float) -> None:
+        s.arrival_s = now
+        s.request_arrivals.append(now)
+        s.state = SessionState.PREFILLING
+        new_len = s.remaining_prefill
+        if self.policy.split_phases:
+            phase = classify(s.total_prompt_len, s.cached_len, new_len,
+                             self.thresholds)
+        else:
+            phase = Phase.COLD_PREFILL  # phase-blind baseline
+        job = Job(session_id=s.session_id, phase=phase, new_len=new_len,
+                  arrival_s=now)
+        if self.policy.resume_to_decode_queue:
+            self.queues.enqueue(job)
+        else:
+            self.queues.q_prefill.append(job)
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def _clock(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def run(self, sessions: Sequence[Session],
+            thresholds: Optional[SLOThresholds] = None) -> ServingReport:
+        by_id = {s.session_id: s for s in sessions}
+        self._t0 = time.perf_counter()
+        next_ctrl = self.ecfg.control_interval_s
+        policy, ecfg = self.policy, self.ecfg
+        C = ecfg.cycle_budget
+
+        if not policy.adaptive:
+            self.scheduler.state.r_min = max(
+                ecfg.granularity,
+                int(policy.static_r_frac * C) // ecfg.granularity
+                * ecfg.granularity)
+
+        while any(s.state != SessionState.FINISHED for s in sessions):
+            now = self._clock()
+            if now > ecfg.max_wall_s:
+                break
+            self._admit(sessions)
+
+            # ---- control update + slot rebind (Algorithm 1) ----------
+            if now >= next_ctrl:
+                if policy.adaptive:
+                    self.scheduler.update()
+                next_ctrl = now + ecfg.control_interval_s
+            slot_exec, level = self.slots.bind(self.scheduler.state.r_min)
+
+            active = [s for s in sessions if s.state == SessionState.DECODING]
+            q_d, q_p = self.queues.occupancy()
+
+            did_work = False
+            # ---- decode stream ----------------------------------------
+            allow_decode = policy.protect_decode or q_p == 0
+            if active and allow_decode:
+                self._decode_step(active)
+                did_work = True
+            elif not active:
+                self._last_decode_end = None
+
+            # ---- resume prefills fused into the decode stream --------
+            if policy.resume_to_decode_queue and self.queues.q_decode:
+                job = self.queues.q_decode.popleft()
+                s = by_id[job.session_id]
+                if s.state == SessionState.PREFILLING:
+                    bucket = self._bucket_for(max(s.remaining_prefill, 1))
+                    self._run_prefill_tokens(s, bucket)
+                    did_work = True
+                    if s.state == SessionState.PREFILLING:
+                        self.queues.q_decode.append(job)  # continue next cycle
+
+            # ---- prefill stream (cold / over-budget / phase-blind) ----
+            did_work |= self._prefill_stream_step(by_id, slot_exec)
+            if not active and self.queues.q_prefill and policy.chunk_by_slots:
+                # opportunistic reclaim (paper §III-C): no decode demand,
+                # so the prefill stream claims the full cycle budget
+                full_exec, _ = self.slots.bind(self.scheduler.cfg.r_base)
+                for _ in range(3):
+                    if (self.queues.q_prefill
+                            and not any(s.state == SessionState.DECODING
+                                        for s in sessions)):
+                        self._prefill_stream_step(by_id, full_exec)
+                    else:
+                        break
+
+            self.trace.append(dict(
+                t=self._clock(), tpot_ms=self.scheduler.state.tpot_step_ms,
+                r_min=self.scheduler.state.r_min,
+                b_prefill=self.scheduler.state.b_prefill,
+                q_d=q_d, q_p=q_p, active=len(active)))
+            if not did_work:
+                time.sleep(0.0005)
+
+        wall = self._clock()
+        extra = {
+            "rebinds": float(self.slots.stats.rebinds),
+            "mean_rebind_us": self.slots.stats.mean_rebind_us,
+            "slot_misses": float(self.slots.stats.misses),
+            "prefix_hits": float(self.pool.stats["prefix_hits"]),
+        }
+        return build_report(policy.name, list(sessions), wall, thresholds,
+                            extra)
+
+    # ------------------------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in _resume_buckets(self.ecfg):
+            if b >= n:
+                return b
+        return _resume_buckets(self.ecfg)[-1]
+
+    def _prefill_stream_step(self, by_id, slot_exec) -> bool:
+        if not self.queues.q_prefill:
+            return False
+        job = self.queues.q_prefill[0]
+        s = by_id[job.session_id]
+        if s.state != SessionState.PREFILLING:
+            self.queues.q_prefill.popleft()
+            return False
+        if s.remaining_prefill == 0:
+            # unreachable with our workloads (shared prefix < full prompt);
+            # would require a last-token re-run that is unsafe for SSM state
+            raise RuntimeError("fully-cached request needs >=1 new token")
+        if self.policy.whole_prefill:
+            # llama.cpp-style: run the entire prompt to completion now
+            bucket = max(_resume_buckets(self.ecfg))
+            while s.state == SessionState.PREFILLING:
+                self._run_prefill_tokens(s, bucket)
+            self.queues.q_prefill.popleft()
+            return True
+        if self.policy.chunk_by_slots:
+            chunk, fn = slot_exec["chunk"], slot_exec["fn"]
+        else:
+            chunk, fn = self._fixed_chunk(), None
+        if chunk <= 0:
+            return False
+        self._run_prefill_tokens(s, chunk, fn=fn)
+        if s.state != SessionState.PREFILLING:
+            self.queues.q_prefill.popleft()
+        return True
+

@@ -1,0 +1,137 @@
+"""KV-cache pool: slot allocation, length tracking, prefix caching.
+
+One engine owns one pool — the paper's single-engine shared-memory-pool
+design (§III-C): prefill writes and decode reads the *same* buffers, so
+a completed prefill's KV is visible to decode with no transfer; slot
+lifetime is managed host-side (the CPU-mutex role), and ordering within
+a step is guaranteed by JAX's functional update semantics (the
+cudaEvent role).
+
+Prefix cache (§II-A substrate): after a cold prefill of a shared system
+prompt, the engine registers a *snapshot* of that slot's cache rows at
+that length.  A later cold prefill with an identical token prefix copies
+the snapshot instead of recomputing.  Snapshotting (rather than pointing
+at the donor slot) is what makes this correct for SSM/hybrid layers
+too: a recurrent state is a point summary valid only at the exact
+length it was taken, and the donor immediately advances past it —
+Marconi (paper ref [9], MLSys'25) makes the same observation for
+hybrid-LLM prefix caching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache
+
+
+def _prefix_key(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(tokens, dtype=np.int32)
+                        .tobytes()).hexdigest()
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    snapshot: Any          # pytree: each cache leaf's [:, slot] rows
+    length: int
+    refs: int = 0
+
+
+class KVCachePool:
+    """Fixed number of batch slots over one stacked cache pytree."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_seq: int,
+                 dtype=jnp.float32, max_prefix_entries: int = 8):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, num_slots, max_seq, dtype)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self._free = set(range(num_slots))
+        self._prefix: Dict[str, PrefixEntry] = {}
+        self.max_prefix_entries = max_prefix_entries
+        self.stats = {"alloc": 0, "free": 0, "prefix_hits": 0,
+                      "prefix_misses": 0, "evictions": 0}
+
+    # ---- slot lifecycle -------------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV pool exhausted: no free slot")
+        slot = min(self._free)
+        self._free.discard(slot)
+        self.lengths[slot] = 0
+        self.stats["alloc"] += 1
+        return slot
+
+    def free(self, slot: int) -> None:
+        self._free.add(slot)
+        self.lengths[slot] = 0
+        self.stats["free"] += 1
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    # ---- prefix cache ---------------------------------------------------
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Snapshot ``slot``'s cache rows as a reusable prefix.  Must be
+        called when exactly ``len(tokens)`` tokens are in the slot."""
+        assert self.lengths[slot] == len(tokens), \
+            (self.lengths[slot], len(tokens))
+        if len(self._prefix) >= self.max_prefix_entries:
+            self._evict_one()
+        snap = jax.tree.map(lambda leaf: leaf[:, slot], self.cache)
+        self._prefix[_prefix_key(tokens)] = PrefixEntry(
+            snapshot=snap, length=len(tokens))
+
+    def lookup(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
+        entry = self._prefix.get(_prefix_key(tokens))
+        if entry is not None:
+            self.stats["prefix_hits"] += 1
+            entry.refs += 1
+        else:
+            self.stats["prefix_misses"] += 1
+        return entry
+
+    def restore_prefix(self, dst_slot: int, entry: PrefixEntry) -> None:
+        """Copy a snapshot into ``dst_slot`` (attn rows + SSM states)."""
+        self.cache = jax.tree.map(
+            lambda leaf, snap: leaf.at[:, dst_slot].set(snap),
+            self.cache, entry.snapshot)
+        self.lengths[dst_slot] = entry.length
+
+    def _evict_one(self) -> None:
+        if not self._prefix:
+            return
+        key = min(self._prefix, key=lambda k: self._prefix[k].refs)
+        del self._prefix[key]
+        self.stats["evictions"] += 1
+
+    # ---- step integration -------------------------------------------------
+    def lengths_device(self) -> jax.Array:
+        return jnp.asarray(self.lengths)
+
+    def commit(self, new_cache, slot_mask: np.ndarray) -> None:
+        """Accept updated cache rows for slots in ``slot_mask`` (bool [B]),
+        keeping old rows elsewhere (protects inactive sessions' SSM
+        states from being advanced by masked lanes)."""
+        if slot_mask.all():
+            self.cache = new_cache
+            return
+        m = jnp.asarray(slot_mask)
+
+        def sel(new, old):
+            shape = [1, self.num_slots] + [1] * (new.ndim - 2)
+            return jnp.where(m.reshape(shape), new, old)
+        self.cache = jax.tree.map(sel, new_cache, self.cache)
+
+    def bytes_per_slot(self) -> int:
+        total = sum(l.size * l.dtype.itemsize
+                    for l in jax.tree_util.tree_leaves(self.cache))
+        return total // self.num_slots

@@ -1,0 +1,121 @@
+"""Serving metrics: TTFT, TPOT, throughput, session-level SLO attainment.
+
+Definitions follow the paper §IV-A exactly:
+  TTFT  — request submission -> first output token (per request: the
+          cold prefill and every resume prefill each start a request).
+  TPOT  — inter-token latency within decode bursts.
+  throughput — aggregate output tokens / wall time.
+  SLO attainment — fraction of *sessions* whose every request met the
+          TTFT bound AND whose TPOT stayed within the TPOT bound
+          (joint criterion; we use per-session max TTFT and p95 TPOT).
+Thresholds are calibrated per model-device pair by scaling isolated
+(single-session, unloaded) performance by a constant factor, as §IV-A
+prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import Session
+
+
+def _pct(xs: Sequence[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else float("nan")
+
+
+@dataclasses.dataclass
+class SLOThresholds:
+    ttft_s: float
+    tpot_s: float
+
+    @classmethod
+    def from_isolated(cls, isolated_ttft_s: float, isolated_tpot_s: float,
+                      factor: float = 3.0) -> "SLOThresholds":
+        return cls(ttft_s=isolated_ttft_s * factor,
+                   tpot_s=isolated_tpot_s * factor)
+
+
+@dataclasses.dataclass
+class ServingReport:
+    policy: str
+    num_sessions: int
+    wall_time_s: float
+    ttft_p50_s: float
+    ttft_p95_s: float
+    tpot_p50_s: float
+    tpot_p95_s: float
+    throughput_tok_s: float
+    slo_attainment: float
+    total_output_tokens: int
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"{self.policy},{self.num_sessions},{self.wall_time_s:.3f},"
+                f"{self.ttft_p50_s * 1e3:.1f},{self.ttft_p95_s * 1e3:.1f},"
+                f"{self.tpot_p50_s * 1e3:.1f},{self.tpot_p95_s * 1e3:.1f},"
+                f"{self.throughput_tok_s:.1f},{self.slo_attainment:.3f}")
+
+    HEADER = ("policy,sessions,wall_s,ttft_p50_ms,ttft_p95_ms,"
+              "tpot_p50_ms,tpot_p95_ms,throughput_tok_s,slo_rate")
+
+
+def collect_ttfts(sessions: Sequence[Session]) -> List[float]:
+    out = []
+    for s in sessions:
+        for arr, first in zip(s.request_arrivals, s.first_token_s):
+            out.append(first - arr)
+    return out
+
+
+def collect_tpots(sessions: Sequence[Session]) -> List[float]:
+    """Inter-token gaps within each contiguous decode burst."""
+    out = []
+    for s in sessions:
+        ts = np.asarray(s.token_times_s)
+        firsts = set(np.round(s.first_token_s, 9).tolist())
+        gaps = np.diff(ts)
+        for i, g in enumerate(gaps):
+            # a gap that ends on a burst-first token spans a tool call /
+            # prefill; exclude it from TPOT
+            if round(float(ts[i + 1]), 9) not in firsts:
+                out.append(float(g))
+    return out
+
+
+def session_slo_ok(s: Session, thr: SLOThresholds) -> bool:
+    ttfts = [f - a for a, f in zip(s.request_arrivals, s.first_token_s)]
+    if any(t > thr.ttft_s for t in ttfts):
+        return False
+    tpots = collect_tpots([s])
+    if tpots and _pct(tpots, 95) > thr.tpot_s:
+        return False
+    return True
+
+
+def build_report(policy: str, sessions: Sequence[Session],
+                 wall_time_s: float,
+                 thresholds: Optional[SLOThresholds] = None,
+                 extra: Optional[Dict[str, float]] = None) -> ServingReport:
+    ttfts = collect_ttfts(sessions)
+    tpots = collect_tpots(sessions)
+    total_tokens = sum(s.output_tokens() for s in sessions)
+    slo = float("nan")
+    if thresholds is not None:
+        oks = [session_slo_ok(s, thresholds) for s in sessions]
+        slo = float(np.mean(oks)) if oks else float("nan")
+    return ServingReport(
+        policy=policy,
+        num_sessions=len(sessions),
+        wall_time_s=wall_time_s,
+        ttft_p50_s=_pct(ttfts, 50),
+        ttft_p95_s=_pct(ttfts, 95),
+        tpot_p50_s=_pct(tpots, 50),
+        tpot_p95_s=_pct(tpots, 95),
+        throughput_tok_s=total_tokens / max(wall_time_s, 1e-9),
+        slo_attainment=slo,
+        total_output_tokens=total_tokens,
+        extra=extra or {},
+    )

@@ -1,0 +1,69 @@
+"""Scheduling policies: AgentServe + the paper's three baselines + the
+two ablations (§IV-A Baselines, §IV-D Ablation).
+
+Every policy runs on the *same* engine machinery (same executables, same
+KV pool, same workload) so measured differences come from scheduling
+decisions only — the fairest single-substrate comparison we can make.
+
+  agentserve — phase split, resume prefills fused into the decode stream
+               under B_prefill(t), cold prefills chunked into the
+               prefill stream sized by the slot partition, TPOT feedback
+               (Algorithm 1), pre-established slots.
+  pd_static  — SGLang-style PD disaggregation: decode protected, but a
+               *static* partition, and all prefills (cold and resume)
+               share one prefill queue.  (== the paper's No-Alg ablation
+               when derived from agentserve.)
+  chunked    — vLLM-style chunked prefill + continuous batching: fixed
+               chunk budget mixed with decodes every cycle, single FCFS
+               prefill queue, no phase awareness, no feedback.
+  fcfs       — llama.cpp-style: strict arrival order; a prefill runs to
+               completion before any decode step proceeds (the
+               head-of-line blocking baseline).
+  no_green   — agentserve minus pre-established slots: every partition
+               change constructs its executable on demand *inside* the
+               serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    adaptive: bool = False            # run Algorithm 1 feedback
+    split_phases: bool = False        # distinguish cold vs resume
+    resume_to_decode_queue: bool = False  # fuse in-budget resumes into Q_D
+    protect_decode: bool = True       # decode step every cycle
+    chunk_by_slots: bool = False      # prefill chunk = slot partition share
+    fixed_chunk_frac: float = 0.5     # when not slot-driven: share of budget
+    whole_prefill: bool = False       # fcfs: run prefill to completion
+    preestablish: bool = True         # pre-build slot executables
+    static_r_frac: float = 0.5        # static decode reservation share
+
+
+AGENTSERVE = PolicySpec(
+    name="agentserve", adaptive=True, split_phases=True,
+    resume_to_decode_queue=True, protect_decode=True, chunk_by_slots=True)
+
+PD_STATIC = PolicySpec(
+    name="pd_static", adaptive=False, split_phases=True,
+    resume_to_decode_queue=False, protect_decode=True, chunk_by_slots=True,
+    static_r_frac=0.5)
+
+CHUNKED = PolicySpec(
+    name="chunked", adaptive=False, split_phases=False,
+    resume_to_decode_queue=False, protect_decode=True, chunk_by_slots=False,
+    fixed_chunk_frac=0.5)
+
+FCFS = PolicySpec(
+    name="fcfs", adaptive=False, split_phases=False,
+    resume_to_decode_queue=False, protect_decode=False, whole_prefill=True)
+
+NO_ALG = dataclasses.replace(AGENTSERVE, name="no_alg", adaptive=False)
+
+NO_GREEN = dataclasses.replace(AGENTSERVE, name="no_green",
+                               preestablish=False)
+
+POLICIES = {p.name: p for p in
+            [AGENTSERVE, PD_STATIC, CHUNKED, FCFS, NO_ALG, NO_GREEN]}

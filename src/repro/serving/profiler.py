@@ -1,0 +1,78 @@
+"""Phase-throughput profiling vs resource share (paper Fig 3).
+
+Measures μ_D(R), μ_C(R), μ_R(R) on the engine's substrate: the resource
+axis R is a share of the cycle token budget C (DESIGN.md §2).  A cycle
+co-schedules one batched decode step with one prefill chunk; giving
+decode share R means the chunk is C - R tokens, so
+
+    μ_D(R) = B_decode   / (t_d + t_p(C - R))      [decode tokens/s]
+    μ_C(R) = R          / (t_d + t_p_cold(R))     [cold-prefill tokens/s]
+    μ_R(R) = R          / (t_d + t_p_resume(R))   [resume tokens/s]
+
+with t_d the decode-step time and t_p(chunk) the chunk time measured at
+a short (cold) or long (resume) cached context.  All three are monotone
+in their own allocation (Assumption 1) and decode saturates at B/t_d as
+R -> C — the Fig 3 shape.  The resulting ``ThroughputProfile`` feeds the
+competitive-ratio analysis (Eq. 1-6) and benchmarks/fig3.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.competitive import ThroughputProfile
+from repro.serving.engine import EngineConfig, get_executables
+from repro.serving.kvcache import KVCachePool
+
+
+def _timed(fn, reps: int) -> float:
+    out = fn()                      # warm / compile
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out[0])
+    return (time.perf_counter() - t0) / reps
+
+
+def profile_throughput(mcfg: ModelConfig, params, *,
+                       ecfg: Optional[EngineConfig] = None,
+                       reps: int = 5, dtype=jnp.float32) -> ThroughputProfile:
+    ecfg = ecfg or EngineConfig()
+    C, g = ecfg.cycle_budget, ecfg.granularity
+    levels = np.arange(g, C + 1, g)
+    decode_fn, prefill_fn = get_executables(
+        mcfg, ecfg.num_slots, ecfg.max_seq, ecfg.moe_mode)
+    pool = KVCachePool(mcfg, ecfg.num_slots, ecfg.max_seq, dtype)
+    B = ecfg.num_slots
+    ctx_long = ecfg.max_seq // 2
+    pool.lengths[:] = ctx_long
+    toks_b = jnp.zeros((B,), jnp.int32)
+    lengths = jnp.asarray(pool.lengths)
+
+    t_d = _timed(lambda: decode_fn(params, pool.cache, toks_b, lengths), reps)
+
+    chunks = sorted({int(C - L) for L in levels if C - L > 0}
+                    | {int(L) for L in levels})
+    t_cold, t_res = {0: 0.0}, {0: 0.0}
+    for ch in chunks:
+        ptoks = jnp.zeros((1, ch), jnp.int32)
+        t_cold[ch] = _timed(lambda: prefill_fn(
+            params, pool.cache, ptoks, jnp.int32(0), jnp.int32(0),
+            jnp.int32(ch - 1)), reps)
+        t_res[ch] = _timed(lambda: prefill_fn(
+            params, pool.cache, ptoks, jnp.int32(1), jnp.int32(ctx_long),
+            jnp.int32(ch - 1)), reps)
+
+    mu_d = [B / (t_d + t_cold[int(C - L)]) for L in levels]
+    mu_c = [L / (t_d + t_cold[int(L)]) for L in levels]
+    mu_r = [L / (t_d + t_res[int(L)]) for L in levels]
+    return ThroughputProfile(
+        levels=levels.astype(float),
+        mu_decode=np.asarray(mu_d), mu_cold=np.asarray(mu_c),
+        mu_resume=np.asarray(mu_r))

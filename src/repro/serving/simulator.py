@@ -1,0 +1,173 @@
+"""Discrete-event simulator over profiled throughput curves.
+
+Two roles (DESIGN.md §2, §7.1):
+
+1. It models the *spatial* concurrency semantics the paper has on GPU —
+   decode and prefill genuinely concurrent on disjoint partitions —
+   which a single CPU/TPU core can only time-multiplex.  Service rates
+   come from a measured ``ThroughputProfile``, so simulated seconds are
+   grounded in real engine timings.
+2. It provides the empirical side of the competitive-ratio validation:
+   run AgentServe's controller trace through the simulator, compare its
+   prefill service with the offline optimum (competitive.offline_optimum)
+   and check Theorem 1's bound.
+
+The simulator advances in control intervals Δt.  Per interval, decode
+work r·Δt·μ_D(R)/r... — rates are read off the profile at the current
+allocation; queues drain accordingly; TPOT is 1/per-stream decode rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.competitive import ThroughputProfile
+from repro.core.scheduler import SchedulerConfig, TPOTScheduler
+
+
+@dataclasses.dataclass
+class SimSession:
+    cold_len: int
+    turns: List[dict]                # {resume_len, decode_len, tool_s}
+    arrival_s: float = 0.0
+    # state
+    phase: str = "cold"              # cold | resume | decode | tool | done
+    turn_idx: int = 0
+    work_left: float = 0.0
+    ready_s: float = 0.0
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    req_arrival: float = 0.0
+    tpots: List[float] = dataclasses.field(default_factory=list)
+
+
+def sessions_from_workload(ws, time_origin: float = 0.0) -> List[SimSession]:
+    out = []
+    for s in ws:
+        turns = [dict(resume_len=len(t.prefill_tokens),
+                      decode_len=t.decode_len, tool_s=t.tool_latency_s)
+                 for t in s.turns[1:]]
+        out.append(SimSession(
+            cold_len=len(s.turns[0].prefill_tokens),
+            turns=[dict(resume_len=0,
+                        decode_len=s.turns[0].decode_len,
+                        tool_s=s.turns[0].tool_latency_s)] + turns,
+            arrival_s=s.ready_s))
+    return out
+
+
+@dataclasses.dataclass
+class SimResult:
+    ttfts: List[float]
+    tpots: List[float]
+    prefill_tokens_served: float
+    wall_s: float
+    r_alloc_trace: List[float]
+    eta_trace: List[float]           # cold fraction per interval (Eq. 1)
+
+    def summary(self) -> Dict[str, float]:
+        return dict(
+            ttft_p50=float(np.percentile(self.ttfts, 50)) if self.ttfts else np.nan,
+            ttft_p95=float(np.percentile(self.ttfts, 95)) if self.ttfts else np.nan,
+            tpot_p50=float(np.percentile(self.tpots, 50)) if self.tpots else np.nan,
+            tpot_p95=float(np.percentile(self.tpots, 95)) if self.tpots else np.nan,
+            prefill_tokens=self.prefill_tokens_served,
+        )
+
+
+def simulate(profile: ThroughputProfile, sessions: Sequence[SimSession], *,
+             policy: str = "agentserve", tpot_slo_ms: float = 50.0,
+             dt: float = 0.05, static_r_frac: float = 0.5,
+             eps_ctx: float = 0.0, max_t: float = 300.0) -> SimResult:
+    """Spatial-concurrency simulation.  Decode holds R(t) of S; prefill
+    holds S - R(t) *simultaneously* (the GPU Green-Context semantics)."""
+    S = float(profile.levels[-1])
+    g = float(profile.levels[0])
+    sched = TPOTScheduler(SchedulerConfig(
+        total_resources=int(S), r_base=int(g), r_init=int(2 * g),
+        delta_r=int(g), tpot_slo_ms=tpot_slo_ms, control_interval_s=dt))
+    adaptive = policy in ("agentserve",)
+    split = policy in ("agentserve", "pd_static")
+    if not adaptive:
+        sched.state.r_min = int(static_r_frac * S)
+
+    t = 0.0
+    prefill_served = 0.0
+    r_trace, eta_trace = [], []
+    sess = list(sessions)
+    while t < max_t and any(s.phase != "done" for s in sess):
+        # arrivals / tool completions
+        for s in sess:
+            if s.phase == "cold" and s.arrival_s <= t and s.work_left == 0:
+                s.work_left = s.cold_len
+                s.req_arrival = t
+            if s.phase == "tool" and s.ready_s <= t:
+                s.phase = "resume"
+                s.work_left = s.turns[s.turn_idx]["resume_len"]
+                s.req_arrival = t
+                if s.work_left == 0:
+                    s.phase = "decode"
+                    s.work_left = s.turns[s.turn_idx]["decode_len"]
+                    s.ttfts.append(0.0)
+
+        R = sched.state.r_min
+        r_trace.append(R)
+        Rp = S - R
+
+        cold_q = [s for s in sess if s.phase == "cold" and s.arrival_s <= t]
+        res_q = [s for s in sess if s.phase == "resume"]
+        dec_q = [s for s in sess if s.phase == "decode"]
+
+        cold_work = sum(s.work_left for s in cold_q)
+        res_work = sum(s.work_left for s in res_q)
+        eta = cold_work / max(cold_work + res_work, 1e-9)
+        eta_trace.append(eta)
+
+        # ---- decode partition ----------------------------------------
+        if dec_q:
+            rate = profile.mu_d(R) * (1.0 - eps_ctx)      # tokens/s total
+            per_stream = rate / len(dec_q)
+            # TPOT_step = ΔL/ΔK with ΔK decode *rounds* in this interval
+            rounds = rate * dt / len(dec_q)
+            sched.record_decode_step(dt, steps=max(rounds, 1e-9))
+            for s in dec_q:
+                produced = per_stream * dt
+                s.tpots.extend([1.0 / max(per_stream, 1e-9)]
+                               * int(round(min(produced, s.work_left))))
+                s.work_left -= produced
+                if s.work_left <= 0:
+                    s.turn_idx += 1
+                    if s.turn_idx >= len(s.turns):
+                        s.phase = "done"
+                    else:
+                        s.phase = "tool"
+                        s.ready_s = t + s.turns[s.turn_idx - 1]["tool_s"]
+
+        # ---- prefill partition (concurrent!) --------------------------
+        # resume prefills first if the policy splits phases
+        order = (res_q + cold_q) if split else sorted(
+            res_q + cold_q, key=lambda s: s.req_arrival)
+        time_left = (1.0 - eps_ctx) * dt
+        for s in order:
+            if time_left <= 0:
+                break
+            mu = profile.mu_p(Rp, 1.0 if s in cold_q else 0.0)
+            can = mu * time_left
+            use = min(can, s.work_left)
+            prefill_served += use
+            time_left -= use / max(mu, 1e-9)
+            s.work_left -= use
+            if s.work_left <= 0:
+                s.ttfts.append(t + dt - s.req_arrival)
+                s.phase = "decode"
+                s.work_left = s.turns[s.turn_idx]["decode_len"]
+
+        if adaptive:
+            sched.update()
+        t += dt
+
+    all_ttft = [x for s in sess for x in s.ttfts]
+    all_tpot = [x for s in sess for x in s.tpots]
+    return SimResult(all_ttft, all_tpot, prefill_served, t, r_trace,
+                     eta_trace)

@@ -1,0 +1,139 @@
+"""ToolBench-like agent workload generators (paper §IV-A, Table I).
+
+Two paradigms, with token distributions matching Table I:
+
+  ReAct           cold 2.5k-3.5k | resume 30-127 (avg 56)  | decode 27-127
+  Plan-and-Execute cold 2.5k-3.5k | resume 125-421 (avg 251)| decode 33-141
+
+``token_scale`` shrinks every length by a constant factor so the same
+session *structure* runs against CPU mini-models in bounded wall time
+(DESIGN.md §7.3); scale=1.0 reproduces Table I exactly (validated by
+benchmarks/table1_tokens.py).
+
+Sessions within a run share one of ``num_system_prompts`` system prompts
+(tool specs are per-deployment, not per-session) — this is what makes
+cross-session prefix caching meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import AgentTurn, Session
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    name: str
+    cold_range: tuple = (2500, 3500)
+    resume_range: tuple = (30, 127)
+    resume_mean: float = 56.0
+    decode_range: tuple = (27, 127)
+    decode_mean: float = 40.0
+    turns_range: tuple = (3, 7)
+    tool_latency_range_s: tuple = (0.05, 0.3)
+
+
+REACT = WorkloadSpec(
+    name="react",
+    resume_range=(30, 127), resume_mean=56.0,
+    decode_range=(27, 127), decode_mean=40.0,
+    turns_range=(4, 8),
+)
+
+PLAN_EXECUTE = WorkloadSpec(
+    name="plan_execute",
+    resume_range=(125, 421), resume_mean=251.0,
+    decode_range=(33, 141), decode_mean=60.0,
+    turns_range=(2, 5),
+)
+
+SPECS = {"react": REACT, "plan_execute": PLAN_EXECUTE}
+
+
+def _clipped_lognormal(rng, lo, hi, mean, size=None):
+    """Right-skewed lengths in [lo, hi] with the requested mean — matches
+    the 'short typical, long tail' shape of tool outputs."""
+    mu = np.log(max(mean - lo, 1.0))
+    x = lo + np.exp(rng.normal(mu, 0.55, size=size))
+    return np.clip(np.round(x), lo, hi).astype(int)
+
+
+def make_session(session_id: int, spec: WorkloadSpec, rng: np.random.Generator,
+                 vocab_size: int, *, token_scale: float = 1.0,
+                 system_prompt: Optional[np.ndarray] = None) -> Session:
+    def scale(n):
+        return max(1, int(round(n * token_scale)))
+
+    cold_len = scale(rng.integers(*spec.cold_range))
+    shared_len = 0
+    if system_prompt is not None:
+        sys_part = system_prompt[:cold_len]
+        shared_len = len(sys_part)
+        user_part = rng.integers(0, vocab_size, size=max(cold_len // 8, 1))
+        cold_tokens = np.concatenate([sys_part, user_part]).astype(np.int32)
+    else:
+        cold_tokens = rng.integers(0, vocab_size, size=cold_len,
+                                   dtype=np.int32)
+
+    n_turns = int(rng.integers(*spec.turns_range))
+    turns: List[AgentTurn] = [AgentTurn(
+        prefill_tokens=cold_tokens,
+        decode_len=scale(_clipped_lognormal(
+            rng, *spec.decode_range, spec.decode_mean)),
+        tool_latency_s=float(rng.uniform(*spec.tool_latency_range_s)),
+    )]
+    for _ in range(n_turns - 1):
+        r_len = scale(_clipped_lognormal(
+            rng, *spec.resume_range, spec.resume_mean))
+        turns.append(AgentTurn(
+            prefill_tokens=rng.integers(0, vocab_size, size=r_len,
+                                        dtype=np.int32),
+            decode_len=scale(_clipped_lognormal(
+                rng, *spec.decode_range, spec.decode_mean)),
+            tool_latency_s=float(rng.uniform(*spec.tool_latency_range_s)),
+        ))
+    return Session(session_id=session_id, turns=turns, workload=spec.name,
+                   shared_prefix_len=shared_len)
+
+
+def make_workload(num_sessions: int, *, workload: str = "react",
+                  vocab_size: int = 512, token_scale: float = 1.0,
+                  num_system_prompts: int = 1, seed: int = 0,
+                  stagger_s: float = 0.15) -> List[Session]:
+    """Sessions arrive staggered by ``stagger_s`` (multi-agent burst)."""
+    rng = np.random.default_rng(seed)
+    spec = SPECS[workload]
+    max_cold = int(round(spec.cold_range[1] * token_scale)) + 1
+    prompts = [rng.integers(0, vocab_size, size=max_cold, dtype=np.int32)
+               for _ in range(num_system_prompts)]
+    sessions = []
+    for i in range(num_sessions):
+        s = make_session(i, spec, rng, vocab_size, token_scale=token_scale,
+                         system_prompt=prompts[i % num_system_prompts])
+        s.ready_s = i * stagger_s
+        sessions.append(s)
+    return sessions
+
+
+def table1_statistics(workload: str, n: int = 200, seed: int = 0):
+    """Empirical token distribution for benchmarks/table1_tokens.py."""
+    rng = np.random.default_rng(seed)
+    spec = SPECS[workload]
+    colds, resumes, decodes = [], [], []
+    for i in range(n):
+        s = make_session(i, spec, rng, vocab_size=512)
+        colds.append(len(s.turns[0].prefill_tokens))
+        for t in s.turns[1:]:
+            resumes.append(len(t.prefill_tokens))
+        for t in s.turns:
+            decodes.append(t.decode_len)
+    stats = {}
+    for k, xs in [("cold_prefill", colds), ("resume_prefill", resumes),
+                  ("decode", decodes)]:
+        xs = np.asarray(xs)
+        stats[k] = dict(min=int(xs.min()), max=int(xs.max()),
+                        mean=float(xs.mean()))
+    return stats

@@ -1,0 +1,72 @@
+"""Checkpointing: numpy-archive save/restore of params + optimizer state.
+
+Flat-path .npz format (no external deps).  Restores onto the caller's
+sharding by default placement; dtypes/structure round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import OptState
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state: Optional[OptState] = None,
+                    step: int = 0, meta: Optional[dict] = None) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    arrays = {f"params{_SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"opt_m{_SEP}{k}": v
+                       for k, v in _flatten(opt_state.m).items()})
+        arrays.update({f"opt_v{_SEP}{k}": v
+                       for k, v in _flatten(opt_state.v).items()})
+        arrays["opt_step"] = np.asarray(opt_state.step)
+    arrays["__step__"] = np.asarray(step)
+    np.savez(p, **arrays)
+    if meta:
+        p.with_suffix(".meta.json").write_text(json.dumps(meta, default=str))
+
+
+def _unflatten_into(template, flat: dict, prefix: str):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = prefix + _SEP + _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def load_checkpoint(path: str, params_template,
+                    opt_template: Optional[OptState] = None,
+                    ) -> Tuple[Any, Optional[OptState], int]:
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    params = _unflatten_into(params_template, flat, "params")
+    opt = None
+    if opt_template is not None and "opt_step" in flat:
+        opt = OptState(
+            step=jnp.asarray(flat["opt_step"]),
+            m=_unflatten_into(opt_template.m, flat, "opt_m"),
+            v=_unflatten_into(opt_template.v, flat, "opt_v"))
+    return params, opt, int(flat["__step__"])

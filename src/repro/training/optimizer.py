@@ -1,0 +1,86 @@
+"""AdamW in pure JAX (no optax), with configurable state dtype.
+
+``state_dtype=bfloat16`` is used for the giant MoE/hybrid configs
+(Mixtral-8x22B, Jamba-1.5-Large) so the full train_step fits v5e HBM at
+the assigned mesh sizes — the MaxText-style bf16-optimizer-state
+trade-off; f32 elsewhere (see EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        u = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return (p_new.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,138 @@
+"""Training step: causal-LM (or masked-unit encoder) loss + AdamW update.
+
+Used by (a) the train_4k dry-run shape for every assigned architecture
+and (b) the examples/train_slm.py end-to-end driver.  Remat (scan-level
+``jax.checkpoint``) keeps train_4k activations within HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.training.optimizer import (AdamWConfig, OptState, apply_updates,
+                                      init_opt_state)
+
+
+def _chunked_ce(params, cfg: ModelConfig, h, targets, mask, chunk: int):
+    """CE over sequence chunks: the [B, chunk, V] logits exist only inside
+    a rematted scan body, so the full [B, S, V] logits (GBs at 4k x 200k
+    vocab) are never materialised — forward or backward."""
+    from repro.models.model import _logits
+    B, S, d = h.shape
+    n = S // chunk
+
+    def body(carry, xs):
+        hc, tc, mc = xs
+        logits = _logits(params, cfg, hc)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + jnp.sum(nll * mc), cnt + jnp.sum(mc)), None
+
+    xs = (h.reshape(B, n, chunk, d).swapaxes(0, 1),
+          targets.reshape(B, n, chunk).swapaxes(0, 1),
+          mask.reshape(B, n, chunk).swapaxes(0, 1))
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.float32)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, embeds=None, labels=None,
+            moe_mode: str = "gmm", remat: bool = True, moe_shards: int = 1,
+            ce_chunk: int = 0):
+    """Next-token CE (decoder) or per-frame unit CE (encoder).
+
+    For encoder-only (HuBERT) the labels are the masked-unit targets with
+    the same shape as the frame sequence.  ``ce_chunk`` > 0 enables the
+    memory-bounded chunked CE (production/dry-run path)."""
+    lbl = labels if labels is not None else tokens
+    if ce_chunk:
+        h, aux = forward_train(params, cfg, tokens, embeds=embeds,
+                               moe_mode=moe_mode, remat=remat,
+                               moe_shards=moe_shards, return_hidden=True)
+        B, S, _ = h.shape
+        if cfg.encoder_only:
+            targets, mask = lbl, jnp.ones((B, S), jnp.float32)
+        else:
+            targets = jnp.concatenate(
+                [lbl[:, 1:], jnp.zeros((B, 1), lbl.dtype)], axis=1)
+            mask = jnp.concatenate(
+                [jnp.ones((B, S - 1), jnp.float32),
+                 jnp.zeros((B, 1), jnp.float32)], axis=1)
+        ce = _chunked_ce(params, cfg, h, targets, mask,
+                         min(ce_chunk, S))
+        loss = ce
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux / max(cfg.num_layers, 1)
+        return loss, {"ce": ce, "aux": aux}
+
+    logits, aux = forward_train(params, cfg, tokens, embeds=embeds,
+                                moe_mode=moe_mode, remat=remat,
+                                moe_shards=moe_shards)
+    if cfg.encoder_only:
+        targets = lbl
+        logit_slice = logits
+    else:
+        targets = lbl[:, 1:]
+        logit_slice = logits[:, :-1]
+    logp = jax.nn.log_softmax(logit_slice.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux / max(cfg.num_layers, 1)
+    return loss, {"ce": nll.mean(), "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    moe_mode: str = "gmm", remat: bool = True,
+                    moe_shards: int = 1, ce_chunk: int = 0,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, stats).
+
+    batch: {"tokens": [B, S]} or {"embeds": [B, S, d], "labels": [B, S]}.
+    ``microbatches`` > 1 enables gradient accumulation: activation memory
+    scales with B/microbatches while the optimizer sees the full global
+    batch (used by the giant configs to fit v5e HBM)."""
+
+    def loss_fn(p, mb):
+        return lm_loss(p, cfg, mb.get("tokens"), embeds=mb.get("embeds"),
+                       labels=mb.get("labels"), moe_mode=moe_mode,
+                       remat=remat, moe_shards=moe_shards, ce_chunk=ce_chunk)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, Any]):
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            n = microbatches
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, parts), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), parts
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g_acc, l_sum), parts_all = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / n, g_acc)
+            loss = l_sum / n
+            parts = jax.tree.map(lambda x: x.mean(0), parts_all)
+        params, opt_state, ostats = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        stats = {"loss": loss, **parts, **ostats}
+        return params, opt_state, stats
+
+    return train_step

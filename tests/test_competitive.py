@@ -1,0 +1,88 @@
+"""Competitive-ratio analysis (§III-B): Theorem 1 / Corollary 2 bounds
+validated against brute-force offline optima over random monotone
+profiles (hypothesis)."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import competitive as comp
+
+
+def _profile(rng_list_d, rng_list_c, rng_list_r):
+    levels = np.arange(10, 101, 10)
+    return comp.ThroughputProfile(
+        levels=levels,
+        mu_decode=np.cumsum(np.abs(rng_list_d)) + 1.0,
+        mu_cold=np.cumsum(np.abs(rng_list_c)) + 1.0,
+        mu_resume=np.cumsum(np.abs(rng_list_r)) + 1.0)
+
+
+floats10 = st.lists(st.floats(0.01, 100.0), min_size=10, max_size=10)
+
+
+@given(d=floats10, c=floats10, r=floats10)
+@settings(max_examples=50)
+def test_monotone_projection(d, c, r):
+    p = _profile(d, c, r)
+    for curve in (p.mu_decode, p.mu_cold, p.mu_resume):
+        assert (np.diff(curve) >= 0).all()          # Assumption 1 enforced
+
+
+@given(d=floats10, c=floats10, r=floats10,
+       slo_frac=st.floats(0.05, 0.99))
+@settings(max_examples=50)
+def test_r_star_minimality(d, c, r, slo_frac):
+    p = _profile(d, c, r)
+    r_min = slo_frac * p.mu_decode[-1]               # always feasible (Eq. 5)
+    rg = comp.r_star_g(p, r_min)
+    assert p.mu_d(rg) >= r_min                       # meets the SLO
+    below = p.levels[p.levels < rg]
+    for lv in below:                                  # minimal (Lemma 1)
+        assert p.mu_decode[list(p.levels).index(lv)] < r_min
+
+
+def test_infeasible_slo_raises():
+    p = _profile([1] * 10, [1] * 10, [1] * 10)
+    with pytest.raises(ValueError):
+        comp.r_star_g(p, r_min=1e9)
+
+
+@given(d=floats10, c=floats10, r=floats10,
+       eta=st.floats(0, 1), delta=st.floats(0, 30),
+       eps=st.floats(0, 0.5), slo_frac=st.floats(0.05, 0.95))
+@settings(max_examples=80)
+def test_theorem1_bound_holds(d, c, r, eta, delta, eps, slo_frac):
+    """An SLO-feasible controller that allocates R*_g + delta (quantised)
+    must retain at least the Theorem-1 fraction of the offline optimum."""
+    p = _profile(d, c, r)
+    slo_ms = 1000.0 / (slo_frac * p.mu_decode[-1])
+    rg = comp.r_star_g(p, comp.r_min_from_slo(slo_ms))
+    bound = comp.instantaneous_bound(p, eta=eta, tpot_slo_ms=slo_ms,
+                                     delta=delta, eps_bar=eps)
+    assert 0.0 <= bound <= 1.0
+    # simulate the worst allowed controller: R_A = min(R*_g + delta, S)
+    S = p.levels[-1]
+    r_alloc = min(rg + delta, S)
+    etas = [eta] * 8
+    achieved = comp.achieved_service(p, etas, [r_alloc] * 8, [eps] * 8)
+    optimum = comp.offline_optimum(p, etas, slo_ms)
+    assert achieved >= bound * optimum - 1e-6
+
+
+@given(d=floats10, c=floats10, r=floats10, eta=st.floats(0, 1),
+       delta=st.floats(0, 30), eps=st.floats(0, 0.5))
+@settings(max_examples=50)
+def test_corollary2_not_tighter_than_theorem1(d, c, r, eta, delta, eps):
+    """The linearised bound must never exceed... it may be looser or equal
+    but both must be valid lower bounds <= 1; we check ordering against
+    the achieved ratio implicitly via Theorem 1's test; here: sanity."""
+    p = _profile(d, c, r)
+    slo_ms = 1000.0 / (0.5 * p.mu_decode[-1])
+    b1 = comp.instantaneous_bound(p, eta=eta, tpot_slo_ms=slo_ms,
+                                  delta=delta, eps_bar=eps)
+    b2 = comp.linearized_bound(p, eta=eta, tpot_slo_ms=slo_ms,
+                               delta=delta, eps_bar=eps)
+    assert 0.0 <= b2 <= 1.0 and 0.0 <= b1 <= 1.0
+    # Cor. 2 uses the max slope over the interval, hence is the looser one
+    assert b2 <= b1 + 1e-9

@@ -1,0 +1,151 @@
+"""Core AgentServe unit + property tests: phase classifier, Algorithm 1
+control law, slot quantisation, dual-queue admission invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.admission import AdmissionQueues, Job
+from repro.core.phases import Phase, PhaseThresholds, classify
+from repro.core.scheduler import SchedulerConfig, TPOTScheduler
+from repro.core.slots import SlotManager
+
+
+# ---------------------------------------------------------------------------
+# phases
+# ---------------------------------------------------------------------------
+
+def test_classify_cold_vs_resume():
+    thr = PhaseThresholds(min_cached_fraction=0.5, resume_max_new=256)
+    assert classify(3000, 0, 3000, thr) == Phase.COLD_PREFILL
+    assert classify(3056, 3000, 56, thr) == Phase.RESUME_PREFILL
+    assert classify(3000, 3000, 0, thr) == Phase.DECODE
+    # over-budget resume is treated as cold (paper §III-A)
+    assert classify(4000, 3000, 1000, thr) == Phase.COLD_PREFILL
+    # barely-cached prefix is still cold
+    assert classify(3000, 100, 2900, thr) == Phase.COLD_PREFILL
+
+
+@given(total=st.integers(1, 10_000), cached_frac=st.floats(0, 1))
+def test_classify_total_consistency(total, cached_frac):
+    cached = int(total * cached_frac)
+    phase = classify(total, cached, total - cached)
+    assert phase in (Phase.COLD_PREFILL, Phase.RESUME_PREFILL, Phase.DECODE)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def _sched(**kw):
+    return TPOTScheduler(SchedulerConfig(
+        total_resources=100, r_base=10, r_init=30, delta_r=10,
+        b_min=16, b_max=512, b_init=128, delta_b=32,
+        theta_low_ms=20.0, theta_high_ms=45.0, **kw))
+
+
+def test_protection_mode():
+    s = _sched()
+    s.record_decode_step(0.100, steps=1)     # 100 ms TPOT > theta_high
+    st_ = s.update()
+    assert st_.mode == "protect"
+    assert st_.b_prefill == 128 - 32
+    assert st_.r_min == 40
+
+
+def test_relaxation_mode():
+    s = _sched()
+    s.record_decode_step(0.005, steps=1)     # 5 ms < theta_low
+    st_ = s.update()
+    assert st_.mode == "relax"
+    assert st_.b_prefill == 160
+    assert st_.r_min == 20
+
+
+def test_hold_band():
+    s = _sched()
+    s.record_decode_step(0.030, steps=1)     # between thresholds
+    st_ = s.update()
+    assert st_.mode == "hold"
+    assert st_.b_prefill == 128 and st_.r_min == 30
+
+
+@given(tpots=st.lists(st.floats(0.001, 0.5), min_size=1, max_size=60))
+@settings(max_examples=50)
+def test_bounds_never_violated(tpots):
+    """B_prefill stays in [b_min, b_max]; R_min in [r_base, S] — whatever
+    the TPOT trajectory (Algorithm 1 clamps, lines 5-9)."""
+    s = _sched()
+    for t in tpots:
+        s.record_decode_step(t, steps=1)
+        st_ = s.update()
+        assert 16 <= st_.b_prefill <= 512
+        assert 10 <= st_.r_min <= 100
+
+
+def test_partition_sums_to_total():
+    s = _sched()
+    for t in [0.1, 0.1, 0.003, 0.1]:
+        s.record_decode_step(t)
+        s.update()
+        d, p = s.partition()
+        assert d + p == 100
+
+
+# ---------------------------------------------------------------------------
+# slots (Green Context analogue)
+# ---------------------------------------------------------------------------
+
+def test_slot_levels_discrete():
+    sm = SlotManager(100, 10, lambda lv: f"exe{lv}")
+    assert sm.levels == [10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    assert len(sm.stats.warmup_s) == 10     # pre-established offline
+
+
+@given(target=st.integers(-50, 200))
+def test_quantize_up_properties(target):
+    """Assumption 2: allocation from {g,...,S}; overshoot delta < g."""
+    sm = SlotManager(100, 10, lambda lv: lv, preestablish=False)
+    lv = sm.quantize_up(target)
+    assert lv in sm.levels
+    clamped = max(min(target, 100), 10)
+    assert lv >= clamped
+    assert lv - clamped < 10                 # delta bounded by granularity
+
+
+def test_rebind_counts_and_no_green_misses():
+    sm = SlotManager(100, 10, lambda lv: lv, preestablish=True)
+    sm.bind(35)
+    sm.bind(35)      # same level: no new rebind
+    sm.bind(55)
+    assert sm.stats.rebinds == 2
+    assert sm.stats.misses == 0
+    ng = SlotManager(100, 10, lambda lv: lv, preestablish=False)
+    ng.bind(35)
+    assert ng.stats.misses == 1              # constructed on demand
+
+
+# ---------------------------------------------------------------------------
+# admission (Q_D / Q_P isolation invariant)
+# ---------------------------------------------------------------------------
+
+@given(jobs=st.lists(st.tuples(
+    st.sampled_from([Phase.COLD_PREFILL, Phase.RESUME_PREFILL, Phase.DECODE]),
+    st.integers(1, 600)), max_size=40))
+def test_cold_never_in_decode_queue(jobs):
+    s = _sched()
+    q = AdmissionQueues(s)
+    for i, (phase, n) in enumerate(jobs):
+        q.enqueue(Job(session_id=i, phase=phase, new_len=n))
+    for job in q.q_decode:
+        assert job.phase != Phase.COLD_PREFILL
+        if job.phase == Phase.RESUME_PREFILL:
+            assert job.new_len <= s.state.b_prefill
+
+
+def test_over_budget_resume_rerouted():
+    s = _sched()
+    q = AdmissionQueues(s)
+    where = q.enqueue(Job(session_id=0, phase=Phase.RESUME_PREFILL,
+                          new_len=s.state.b_prefill + 1))
+    assert where == "Q_P"
+    assert q.q_prefill[0].enqueued_cold

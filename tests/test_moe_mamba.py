@@ -1,0 +1,112 @@
+"""MoE and Mamba-2 layer-level tests: path equivalence, capacity
+semantics, router properties, SSD chunk/step equivalence."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import MoEConfig, SSMConfig
+from repro.models import mamba2
+from repro.models.moe import apply_moe, init_moe
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(2)
+
+
+def _moe_parts(E=4, k=2, d=32, f=64):
+    moe = MoEConfig(num_experts=E, top_k=k)
+    params = init_moe(KEY, d, f, moe, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, d))
+    return moe, params, x
+
+
+def test_gmm_matches_dense_without_drops():
+    moe, params, x = _moe_parts()
+    out_d, aux_d = apply_moe(params, x, moe, "swiglu", mode="dense")
+    out_g, aux_g = apply_moe(params, x, moe, "swiglu", mode="gmm",
+                             capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_d), rtol=1e-6)
+
+
+def test_gmm_sharded_dispatch_matches():
+    moe, params, x = _moe_parts()
+    out1, _ = apply_moe(params, x, moe, "swiglu", mode="gmm",
+                        capacity_factor=8.0, data_shards=1)
+    out2, _ = apply_moe(params, x, moe, "swiglu", mode="gmm",
+                        capacity_factor=8.0, data_shards=4)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_capacity_drops_reduce_output():
+    """With capacity ~0 most tokens are dropped -> output ~ 0."""
+    moe, params, x = _moe_parts()
+    out, _ = apply_moe(params, x, moe, "swiglu", mode="gmm",
+                       capacity_factor=0.01)
+    full, _ = apply_moe(params, x, moe, "swiglu", mode="dense")
+    assert np.abs(np.asarray(out)).sum() < np.abs(np.asarray(full)).sum()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_aux_loss_near_balanced_floor(seed):
+    """Switch aux loss E*sum(f*P) ~ 1 near balance.  The exact >=1 bound
+    (Cauchy-Schwarz) holds when f == P; with top-k dispatch f and P can
+    decorrelate slightly, so we assert the floor with top-k slack and
+    that imbalance is penalised upward, never rewarded toward 0."""
+    moe, params, _ = _moe_parts()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 16, 32))
+    _, aux = apply_moe(params, x, moe, "swiglu", mode="dense")
+    assert 0.9 <= float(aux) < float(moe.num_experts) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD
+# ---------------------------------------------------------------------------
+
+def _ssm_parts(d=32):
+    ssm = SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=16,
+                    chunk_size=8)
+    params = mamba2.init_mamba2(KEY, d, ssm, jnp.float32)
+    return ssm, params
+
+
+def test_scan_matches_stepwise_decode():
+    """Chunked SSD scan over a sequence == token-by-token recurrence."""
+    d = 32
+    ssm, params = _ssm_parts(d)
+    B, S = 2, 24
+    u = jax.random.normal(KEY, (B, S, d)) * 0.3
+    st0 = mamba2.init_ssm_state(B, d, ssm, jnp.float32)
+    y_scan, st_scan = mamba2.apply_mamba2_scan(params, u, st0, ssm)
+    st = st0
+    ys = []
+    for t in range(S):
+        y_t, st = mamba2.apply_mamba2_step(params, u[:, t:t + 1], st, ssm)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_scan.ssd), np.asarray(st.ssd),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_scan.conv_x),
+                               np.asarray(st.conv_x), rtol=1e-5, atol=1e-5)
+
+
+def test_scan_state_carry_across_calls():
+    d = 32
+    ssm, params = _ssm_parts(d)
+    B, S = 1, 32
+    u = jax.random.normal(KEY, (B, S, d)) * 0.3
+    st0 = mamba2.init_ssm_state(B, d, ssm, jnp.float32)
+    y_full, st_full = mamba2.apply_mamba2_scan(params, u, st0, ssm)
+    y1, st1 = mamba2.apply_mamba2_scan(params, u[:, :20], st0, ssm)
+    y2, st2 = mamba2.apply_mamba2_scan(params, u[:, 20:], st1, ssm)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st2.ssd), np.asarray(st_full.ssd),
+                               rtol=3e-4, atol=3e-4)
