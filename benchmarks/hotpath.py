@@ -1,0 +1,216 @@
+"""Hot-path microbenchmark: decode dispatch overhead + resume packing.
+
+    PYTHONPATH=src python benchmarks/hotpath.py [--steps N] [--out F]
+
+Measures, on the quickstart (smollm-360m smoke) config:
+
+  * the seed per-step decode path (per-token host sync: block, logits
+    copy, NumPy argmax, where-select commit, lengths re-upload),
+  * the fused device-resident step (``forward_decode_fused``, donated
+    cache, no per-token sync),
+  * the K-step megastep (one ``lax.scan`` executable per K tokens),
+  * serial batch-1 vs batched [M, bucket] resume prefill,
+
+and emits ``BENCH_hotpath.json`` with decode tokens/s, per-token
+dispatch overhead (per-token time minus the megastep floor) and resume
+throughput — the perf trajectory anchor for DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, get_executables
+from repro.serving.kvcache import KVCachePool
+
+ECFG = EngineConfig(num_slots=8, max_seq=512, cycle_budget=160,
+                    granularity=16, b_min=16, b_max=256, b_init=64)
+CTX = 128            # cached context per slot during decode timing
+ACTIVE = 6           # active lanes out of num_slots (sessions churn)
+MEGA_K = 8
+RESUME_M, RESUME_BUCKET = 4, 64
+
+
+def _fresh_state(cfg, params, ex):
+    pool = KVCachePool(cfg, ECFG.num_slots, ECFG.max_seq)
+    B = ECFG.num_slots
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, CTX)),
+                       jnp.int32)
+    for slot in range(B):
+        lg, pool.cache = ex.prefill(params, pool.cache, toks,
+                                    jnp.int32(slot), jnp.int32(0),
+                                    jnp.int32(CTX - 1))
+        pool.lengths[slot] = CTX
+    jax.block_until_ready(lg)
+    mask = np.zeros((B,), bool)
+    mask[:ACTIVE] = True
+    tokens = rng.integers(0, cfg.vocab_size, size=(B,)).astype(np.int32)
+    return pool, tokens, mask
+
+
+def bench_seed_steps(cfg, params, ex, steps):
+    """The seed engine's per-token path, faithfully."""
+    pool, tokens, mask = _fresh_state(cfg, params, ex)
+    lengths = pool.lengths
+
+    def one_step():
+        logits, new_cache = ex.decode(params, pool.cache,
+                                      jnp.asarray(tokens),
+                                      jnp.asarray(lengths))
+        logits = np.asarray(jax.block_until_ready(logits))
+        pool.commit(new_cache, mask)
+        for b in np.nonzero(mask)[0]:
+            lengths[b] += 1
+            tokens[b] = logits[b].argmax()
+
+    one_step()                      # warm
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        one_step()
+    return (time.perf_counter() - t0) / steps
+
+
+def bench_fused_steps(cfg, params, ex, steps):
+    pool, tokens, mask = _fresh_state(cfg, params, ex)
+    t = jnp.asarray(tokens)
+    l = jnp.asarray(pool.lengths)
+    a = jnp.asarray(mask)
+    t, pool.cache, l = ex.fused(params, pool.cache, t, l, a)   # warm
+    jax.block_until_ready(t)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        t, pool.cache, l = ex.fused(params, pool.cache, t, l, a)
+    jax.block_until_ready(t)
+    return (time.perf_counter() - t0) / steps
+
+
+def bench_megastep(cfg, params, ex, steps):
+    pool, tokens, mask = _fresh_state(cfg, params, ex)
+    fn = ex.megastep(MEGA_K)
+    t = jnp.asarray(tokens)
+    l = jnp.asarray(pool.lengths)
+    a = jnp.asarray(mask)
+    _, t, pool.cache, l = fn(params, pool.cache, t, l, a)      # warm
+    jax.block_until_ready(t)
+    iters = max(1, steps // MEGA_K)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _, t, pool.cache, l = fn(params, pool.cache, t, l, a)
+    jax.block_until_ready(t)
+    return (time.perf_counter() - t0) / (iters * MEGA_K)
+
+
+def bench_resume(cfg, params, ex, reps):
+    """Serial batch-1 vs batched [M, bucket] resume prefill."""
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    size=(RESUME_M, RESUME_BUCKET)),
+                       jnp.int32)
+    slots = jnp.arange(RESUME_M, dtype=jnp.int32)
+    lidx = jnp.full((RESUME_M,), RESUME_BUCKET - 1, jnp.int32)
+
+    pool, _, _ = _fresh_state(cfg, params, ex)
+    lens = jnp.full((RESUME_M,), CTX, jnp.int32)
+
+    def serial():
+        lg = None
+        for i in range(RESUME_M):
+            lg, pool.cache = ex.prefill(params, pool.cache, rows[i][None],
+                                        jnp.int32(i), jnp.int32(CTX),
+                                        jnp.int32(RESUME_BUCKET - 1))
+            np.asarray(lg)          # seed path blocked per chunk
+        return lg
+
+    def batched():
+        lg, pool.cache = ex.resume(params, pool.cache, rows, slots, lens,
+                                   lidx)
+        return lg
+
+    out = {}
+    for name, fn in [("serial", serial), ("batched", batched)]:
+        jax.block_until_ready(fn())     # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out_l = fn()
+        jax.block_until_ready(out_l)
+        dt = (time.perf_counter() - t0) / reps
+        out[name] = {"s_per_call": dt,
+                     "tok_s": RESUME_M * RESUME_BUCKET / dt}
+    out["speedup_batched_vs_serial"] = (out["serial"]["s_per_call"]
+                                        / out["batched"]["s_per_call"])
+    out.update(m=RESUME_M, bucket=RESUME_BUCKET)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0,
+                    help="decode steps per variant (0 = auto-calibrate)")
+    ap.add_argument("--resume-reps", type=int, default=20)
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("smollm-360m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ex = get_executables(cfg, ECFG.num_slots, ECFG.max_seq, ECFG.moe_mode)
+
+    steps = args.steps
+    if steps <= 0:
+        probe = bench_seed_steps(cfg, params, ex, 8)
+        steps = int(np.clip(3.0 / probe, 32, 1500))     # ~3 s per variant
+    print(f"model={cfg.name} backend={jax.default_backend()} "
+          f"decode steps/variant={steps}")
+
+    t_seed = bench_seed_steps(cfg, params, ex, steps)
+    t_fused = bench_fused_steps(cfg, params, ex, steps)
+    t_mega = bench_megastep(cfg, params, ex, steps)
+    resume = bench_resume(cfg, params, ex, args.resume_reps)
+
+    def tok_s(t):
+        return ACTIVE / t
+
+    report = {
+        "model": cfg.name,
+        "backend": jax.default_backend(),
+        "decode": {
+            "slots": ECFG.num_slots, "active": ACTIVE, "ctx": CTX,
+            "steps": steps, "megastep_k": MEGA_K,
+            "seed_per_step": {"ms_per_step": t_seed * 1e3,
+                              "tok_s": tok_s(t_seed)},
+            "fused": {"ms_per_step": t_fused * 1e3, "tok_s": tok_s(t_fused)},
+            "megastep": {"ms_per_step": t_mega * 1e3, "tok_s": tok_s(t_mega)},
+            "speedup_fused_vs_seed": t_seed / t_fused,
+            "speedup_megastep_vs_seed": t_seed / t_mega,
+            # megastep is the dispatch-amortised floor: anything above it
+            # is per-step dispatch + host-sync overhead
+            "dispatch_overhead_ms_per_step": {
+                "seed_per_step": (t_seed - t_mega) * 1e3,
+                "fused": (t_fused - t_mega) * 1e3,
+            },
+        },
+        "resume": resume,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    d = report["decode"]
+    print(f"decode tok/s  seed={d['seed_per_step']['tok_s']:.1f}  "
+          f"fused={d['fused']['tok_s']:.1f} "
+          f"({d['speedup_fused_vs_seed']:.2f}x)  "
+          f"megastep{MEGA_K}={d['megastep']['tok_s']:.1f} "
+          f"({d['speedup_megastep_vs_seed']:.2f}x)")
+    print(f"resume tok/s  serial={resume['serial']['tok_s']:.0f}  "
+          f"batched={resume['batched']['tok_s']:.0f} "
+          f"({resume['speedup_batched_vs_serial']:.2f}x)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

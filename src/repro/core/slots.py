@@ -90,3 +90,33 @@ class SlotManager:
     def overshoot(self, target: int) -> int:
         """δ for a given target (slot-rounding overshoot)."""
         return self.quantize_up(target) - max(min(target, self.total), self.g)
+
+    # ---- downward binding (decode-megastep grids) ----------------------
+    def quantize_down(self, target: int) -> Optional[int]:
+        """Round a target *down* to the nearest slot level, or ``None``
+        when the target is below the smallest slot.  Used by grids whose
+        level is a hard cap (e.g. megastep token counts must not exceed
+        the shortest active decode burst), where rounding up would
+        overshoot a correctness bound rather than a resource one."""
+        if target < self.g:
+            return None
+        return min(target, self.total) // self.g * self.g
+
+    def bind_down(self, target: int) -> Optional[Tuple[Any, int]]:
+        """Return (executable, level) for the nearest slot ≤ target, or
+        ``None`` when no level fits.  Same miss/rebind accounting as
+        ``bind``."""
+        lv = self.quantize_down(target)
+        if lv is None:
+            return None
+        t0 = time.perf_counter()
+        if lv not in self._slots:          # No-Green path: build on demand
+            self._slots[lv] = self._builder(lv)
+            self.stats.misses += 1
+        exe = self._slots[lv]
+        dt = time.perf_counter() - t0
+        if self.current_level != lv:
+            self.stats.rebinds += 1
+            self.stats.rebind_total_s += dt
+            self.current_level = lv
+        return exe, lv

@@ -8,7 +8,14 @@ head in VMEM scratch — the [G, hd] accumulator never round-trips to HBM.
 
 Per-sequence valid lengths arrive via scalar prefetch
 (``PrefetchScalarGridSpec``): they are needed *before* the tile loop to
-mask cache padding, exactly the role scalar prefetch plays on TPU.
+mask cache padding, exactly the role scalar prefetch plays on TPU —
+and, since they are available to the BlockSpec index maps, to *skip the
+HBM traffic* of fully-out-of-range KV tiles, not just their compute:
+tiles whose start lies beyond the sequence's valid length map back to
+the last in-range tile index (the revisit-block trick), and the Pallas
+pipeline elides the DMA when a block index repeats across consecutive
+grid steps.  For a serving mix of short and long sequences this makes
+per-sequence decode bytes O(length), not O(S_max).
 """
 from __future__ import annotations
 
@@ -80,13 +87,21 @@ def flash_decode_bhgd(
     kernel = functools.partial(
         _decode_kernel, block_k=block_k, num_kv_blocks=nk, scale=scale)
 
+    def kv_index(b, h, ik, lens):
+        # Tiles fully beyond the valid length revisit the last in-range
+        # tile: a repeated block index means the pipeline skips the
+        # HBM->VMEM copy (their compute is already skipped by the
+        # ``pl.when`` guard in the kernel body).
+        nvalid = jnp.maximum((lens[b] + block_k - 1) // block_k, 1)
+        return (b, h, jnp.minimum(ik, nvalid - 1), 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hk, nk),
         in_specs=[
             pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), kv_index),
+            pl.BlockSpec((1, 1, block_k, hd), kv_index),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
         scratch_shapes=[

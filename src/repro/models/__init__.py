@@ -1,3 +1,5 @@
 from repro.models.model import (  # noqa: F401
-    cache_shape, forward_cold, forward_decode, forward_prefill,
-    forward_train, group_layout, init_cache, init_params, params_shape)
+    POSITIONAL_CACHE_KEYS, cache_shape, forward_cold, forward_decode,
+    forward_decode_fused, forward_decode_megastep, forward_prefill,
+    forward_resume_batch, forward_train, group_layout, init_cache,
+    init_params, merge_decode_cache, params_shape)

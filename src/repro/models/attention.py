@@ -358,8 +358,9 @@ def decode_attention_seqpar(q, k_new, v_new, k_cache, v_cache, lengths,
         in_specs += [specs_kv, specs_kv, specs_q, specs_q]
         args += [k_scale, v_scale] + list(new_scales)
         out_specs = out_specs + (specs_kv, specs_kv)
-    fn = jax.shard_map(local, mesh=spmd.mesh, in_specs=tuple(in_specs),
-                       out_specs=out_specs)
+    from repro.distributed.context import shard_map
+    fn = shard_map(local, mesh=spmd.mesh, in_specs=tuple(in_specs),
+                   out_specs=out_specs)
     return fn(*args)
 
 

@@ -13,6 +13,10 @@ Public entry points:
   forward_train                   — full causal (or encoder) forward
   forward_prefill                 — chunk prefill writing into a cache
   forward_decode                  — one token per active sequence
+  forward_decode_fused            — decode + greedy sample + cache merge,
+                                    fully device-resident (DESIGN.md §3)
+  forward_decode_megastep         — K fused decode steps in one lax.scan
+  forward_resume_batch            — M resume prefills packed in one call
 """
 from __future__ import annotations
 
@@ -306,3 +310,118 @@ def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
         seq_parallel=seq_parallel)
     logits = _logits(params, cfg, h[:, 0, :])
     return logits, new_cache, lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# device-resident serving hot path (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+# Cache leaves whose writes are *positional* (landing at sequence offsets
+# derived from ``lengths``) as opposed to *stateful* (a full overwrite of
+# a recurrent state every step).  Positional leaves never need a masked
+# merge: a lane's write lands at its first invalid position, which is
+# only ever read after a later prefill has overwritten it.
+POSITIONAL_CACHE_KEYS = frozenset({"k", "v", "ks", "vs"})
+
+
+def merge_decode_cache(new_cache, old_cache, active):
+    """Merge a decode step's cache updates under an active-lane mask.
+
+    Stateful (SSM) leaves are where-selected per batch lane so inactive
+    sessions' recurrent states are not advanced by masked lanes; purely
+    positional (attention KV) leaves pass through untouched — combined
+    with the scratch-row write redirection in ``forward_decode_fused``
+    this removes the O(full-cache) where-select the host-side
+    ``KVCachePool.commit`` pays per token."""
+    def merge_layer(new_l, old_l):
+        if set(new_l) <= POSITIONAL_CACHE_KEYS:
+            return new_l
+        out = {}
+        for k, n in new_l.items():
+            shape = (1, n.shape[1]) + (1,) * (n.ndim - 2)
+            out[k] = jnp.where(active.reshape(shape), n, old_l[k])
+        return out
+    return {name: merge_layer(layer, old_cache[name])
+            for name, layer in new_cache.items()}
+
+
+def _scratch_write_lengths(cache, lengths, active):
+    """Redirect inactive lanes' positional writes to the cache's last
+    sequence row (the scratch row — engines must keep real content out
+    of it; see DESIGN.md §3).  Attention-free caches need no redirect."""
+    for layer in cache.values():
+        if "k" in layer:
+            return jnp.where(active, lengths,
+                             jnp.int32(layer["k"].shape[2] - 1))
+    return lengths
+
+
+def forward_decode_fused(params, cfg: ModelConfig, tokens, cache, lengths,
+                         active, *, moe_mode: str = "gmm",
+                         window_override: Optional[int] = None,
+                         moe_capacity: float = 1.25, moe_shards: int = 1):
+    """One decode step with greedy sampling, length increment and the
+    active-lane cache merge folded in, so a serving engine can keep
+    ``tokens``/``lengths``/``active`` as device arrays and never sync
+    per token (DESIGN.md §3).
+
+    tokens: [B] int32 (last token per lane; don't-care where inactive);
+    active: [B] bool.  Returns (next_tokens [B], new_cache, new_lengths);
+    inactive lanes keep their token and length unchanged, and their only
+    cache writes land in the scratch (last) sequence row."""
+    write_lengths = _scratch_write_lengths(cache, lengths, active)
+    logits, new_cache, _ = forward_decode(
+        params, cfg, tokens, cache, write_lengths, moe_mode=moe_mode,
+        window_override=window_override, moe_capacity=moe_capacity,
+        moe_shards=moe_shards)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    next_tokens = jnp.where(active, next_tokens, tokens)
+    merged = merge_decode_cache(new_cache, cache, active)
+    return next_tokens, merged, lengths + active.astype(jnp.int32)
+
+
+def forward_decode_megastep(params, cfg: ModelConfig, tokens, cache,
+                            lengths, active, *, num_steps: int,
+                            moe_mode: str = "gmm",
+                            window_override: Optional[int] = None,
+                            moe_capacity: float = 1.25, moe_shards: int = 1):
+    """``num_steps`` fused decode iterations as one ``lax.scan``
+    executable, amortising dispatch over K emitted tokens per lane.
+
+    Returns (tokens_seq [K, B], next_tokens [B], new_cache, new_lengths);
+    ``tokens_seq[i]`` is the token emitted by step i (inactive lanes
+    repeat their input token)."""
+    def body(carry, _):
+        t, l, c = carry
+        nt, nc, nl = forward_decode_fused(
+            params, cfg, t, c, l, active, moe_mode=moe_mode,
+            window_override=window_override, moe_capacity=moe_capacity,
+            moe_shards=moe_shards)
+        return (nt, nl, nc), nt
+
+    (t, l, c), toks = jax.lax.scan(body, (tokens, lengths, cache), None,
+                                   length=num_steps)
+    return toks, t, c, l
+
+
+def forward_resume_batch(params, cfg: ModelConfig, tokens, cache, slot_idx,
+                         lengths, logit_idx, *, moe_mode: str = "gmm",
+                         window_override: Optional[int] = None,
+                         block_size: int = 512, moe_capacity: float = 1.25,
+                         moe_shards: int = 1):
+    """Batched resume prefill: M jobs packed as one [M, bucket] chunk.
+
+    tokens: [M, S]; slot_idx: [M] int32 (distinct cache slots);
+    lengths: [M] (cached tokens per slot); logit_idx: [M] (last unpadded
+    position per row).  Gathers the M slot rows out of the stacked
+    cache, runs one batch-M prefill, and scatters the rows back.
+    Returns (logits [M, vocab], new_cache)."""
+    sub = jax.tree.map(lambda leaf: jnp.take(leaf, slot_idx, axis=1), cache)
+    logits, sub2, _ = forward_prefill(
+        params, cfg, tokens, sub, lengths, moe_mode=moe_mode,
+        window_override=window_override, block_size=block_size,
+        moe_capacity=moe_capacity, moe_shards=moe_shards,
+        logit_idx=logit_idx)
+    new_cache = jax.tree.map(
+        lambda full, rows: full.at[:, slot_idx].set(rows), cache, sub2)
+    return logits, new_cache

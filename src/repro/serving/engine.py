@@ -17,6 +17,20 @@ co-scheduled prefill chunk.  The scheduler therefore measures TPOT as
 the gap between consecutive decode-step completions — the quantity the
 user actually experiences (and what Fig 2 plots).
 
+Device-resident hot path (DESIGN.md §3): the decode stream never syncs
+per token.  Greedy sampling, the length increment and the active-lane
+cache merge are folded into one jitted step (``forward_decode_fused``),
+so ``last_token``/``lengths``/``active`` live as device arrays between
+steps; the host only blocks at *flush points* (control-interval
+boundaries, burst completions, and every ``telemetry_sample_steps``
+steps), where it records the aggregate inter-emission gap with the step
+count — the same TPOT quantity, measured at a sampled cadence.  When
+both queues are empty and no control update is due, up to K decode
+iterations are fused into one ``lax.scan`` *megastep* executable drawn
+from a pre-established grid (the same Green-Context shape-stable
+discipline as the prefill slots).  Resume prefills from Q_D are packed
+M-at-a-time into one [M, bucket] batched executable.
+
 Slot semantics: ``SlotManager`` holds pre-compiled prefill executables
 keyed by decode-reservation level; binding level R dispatches the
 (C - R)-token chunk executable.  With ``preestablish=False`` (the
@@ -24,13 +38,15 @@ No-Green ablation) the executable is rebuilt on demand inside the
 serving path, reproducing the paper's on-demand-allocation cost.
 
 Executable shapes are always drawn from the pre-established grid (slot
-chunks + power-of-two resume buckets); shorter real work is padded to
-the executable's shape and masked — shape-stable dispatch is precisely
-the Green-Context-analogue discipline.
+chunks + power-of-two resume buckets + megastep levels + resume batch
+sizes); shorter real work is padded to the executable's shape and
+masked — shape-stable dispatch is precisely the Green-Context-analogue
+discipline.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -43,7 +59,9 @@ from repro.core.admission import AdmissionQueues, Job
 from repro.core.phases import Phase, PhaseThresholds, classify
 from repro.core.scheduler import SchedulerConfig, TPOTScheduler
 from repro.core.slots import SlotManager
-from repro.models import forward_decode, forward_prefill
+from repro.models import (forward_decode, forward_decode_fused,
+                          forward_decode_megastep, forward_prefill,
+                          forward_resume_batch)
 from repro.serving.kvcache import KVCachePool
 from repro.serving.metrics import ServingReport, SLOThresholds, build_report
 from repro.serving.policies import PolicySpec
@@ -64,6 +82,11 @@ class EngineConfig:
     b_init: int = 128
     delta_b: int = 32
     max_wall_s: float = 300.0
+    # --- device-resident hot path (DESIGN.md §3) ----------------------
+    megastep_max: int = 8            # K cap for fused decode megasteps
+    megastep_unit: int = 2           # megastep grid granularity (≥2)
+    resume_batch_max: int = 4        # M cap for batched resume prefill
+    telemetry_sample_steps: int = 32  # decode flush cadence (host sync)
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -75,10 +98,26 @@ def _resume_buckets(cfg: EngineConfig) -> List[int]:
     return out
 
 
+@dataclasses.dataclass
+class HotPathExecutables:
+    """One compiled-executable set per (model, shapes) key.
+
+    ``fused``/``resume`` and every megastep executable *donate* their
+    cache argument: the previous cache buffer is consumed by the call,
+    which lets XLA update KV rows in place instead of copying the full
+    cache per step.  Callers must immediately replace their cache
+    reference with the returned one (``ServingEngine`` does)."""
+    decode: Callable       # legacy per-step decode returning logits
+    prefill: Callable      # batch-1 chunk prefill
+    fused: Callable        # device-resident decode step (donates cache)
+    resume: Callable       # batched resume prefill (donates cache)
+    megastep: Callable[[int], Callable]   # K -> jitted scan executable
+
+
 # Shared across engine instances for the same (model, shapes): baselines
 # and AgentServe then dispatch the *same* compiled code, isolating the
 # scheduling policy as the only varying factor.
-_EXEC_CACHE: Dict[Tuple, Tuple[Callable, Callable]] = {}
+_EXEC_CACHE: Dict[Tuple, HotPathExecutables] = {}
 
 
 def _raw_fns(mcfg: ModelConfig, moe_mode: str):
@@ -100,15 +139,42 @@ def _raw_fns(mcfg: ModelConfig, moe_mode: str):
             cache, sub2)
         return logits[0], new_cache
 
-    return decode_step, prefill_step
+    def fused_step(params, cache, tokens, lengths, active):
+        return forward_decode_fused(params, mcfg, tokens, cache, lengths,
+                                    active, moe_mode=moe_mode)
+
+    def mega_step(params, cache, tokens, lengths, active, *, num_steps):
+        return forward_decode_megastep(
+            params, mcfg, tokens, cache, lengths, active,
+            num_steps=num_steps, moe_mode=moe_mode)
+
+    def resume_step(params, cache, tokens, slots, lengths, logit_idx):
+        return forward_resume_batch(params, mcfg, tokens, cache, slots,
+                                    lengths, logit_idx, moe_mode=moe_mode)
+
+    return decode_step, prefill_step, fused_step, mega_step, resume_step
 
 
 def get_executables(mcfg: ModelConfig, num_slots: int, max_seq: int,
-                    moe_mode: str):
+                    moe_mode: str) -> HotPathExecutables:
     key = (mcfg, num_slots, max_seq, moe_mode)
     if key not in _EXEC_CACHE:
-        d, p = _raw_fns(mcfg, moe_mode)
-        _EXEC_CACHE[key] = (jax.jit(d), jax.jit(p))
+        d, p, f, m, r = _raw_fns(mcfg, moe_mode)
+        mega_jits: Dict[int, Callable] = {}
+
+        def megastep(num_steps: int) -> Callable:
+            if num_steps not in mega_jits:
+                mega_jits[num_steps] = jax.jit(
+                    functools.partial(m, num_steps=num_steps),
+                    donate_argnums=(1,))
+            return mega_jits[num_steps]
+
+        _EXEC_CACHE[key] = HotPathExecutables(
+            decode=jax.jit(d),
+            prefill=jax.jit(p),
+            fused=jax.jit(f, donate_argnums=(1,)),
+            resume=jax.jit(r, donate_argnums=(1,)),
+            megastep=megastep)
     return _EXEC_CACHE[key]
 
 
@@ -131,22 +197,58 @@ class ServingEngine:
             control_interval_s=self.ecfg.control_interval_s))
         self.queues = AdmissionQueues(self.scheduler)
         self.thresholds = PhaseThresholds(resume_max_new=self.ecfg.b_max)
+        self._buckets = _resume_buckets(self.ecfg)
 
-        self._decode_fn, self._prefill_fn = get_executables(
+        self._ex = get_executables(
             model_cfg, self.ecfg.num_slots, self.ecfg.max_seq,
             self.ecfg.moe_mode)
+        self._decode_fn, self._prefill_fn = self._ex.decode, self._ex.prefill
+        # resume batch sizes: powers of two up to the M cap (exact-M
+        # dispatch — batches round *down* to a warmed size, no padding
+        # rows, so the scatter never sees duplicate slot indices)
+        self._resume_levels = []
+        m = 1
+        while m <= min(self.ecfg.resume_batch_max, self.ecfg.num_slots):
+            self._resume_levels.append(m)
+            m *= 2
         self.slots = SlotManager(
             C, g, self._build_slot, preestablish=policy.preestablish)
+        self.megasteps: Optional[SlotManager] = None
+        if self.ecfg.megastep_max >= self.ecfg.megastep_unit >= 2:
+            total = (self.ecfg.megastep_max // self.ecfg.megastep_unit
+                     * self.ecfg.megastep_unit)
+            self.megasteps = SlotManager(
+                total, self.ecfg.megastep_unit, self._build_megastep,
+                preestablish=policy.preestablish)
         self._warm_shared()
 
         # run-state
         self._t0 = time.perf_counter()
-        self._last_decode_end: Optional[float] = None
         self.trace: List[Dict] = []       # per-cycle telemetry (Fig 2)
+        # device-resident decode state (rebuilt from host mirrors only on
+        # membership changes; see DESIGN.md §3)
+        B = self.ecfg.num_slots
+        self._dev_tokens = jnp.zeros((B,), jnp.int32)
+        self._dev_lengths = jnp.zeros((B,), jnp.int32)
+        self._dev_mask = jnp.zeros((B,), bool)
+        self._dev_ids: List[int] = []
+        self._dev_dirty = True
+        # telemetry window (sampled-cadence sync)
+        self._window_t0: Optional[float] = None
+        self._window_steps = 0
+        self._window_sessions: List[Session] = []
+        self.hotpath_stats = {"fused_steps": 0, "megasteps": 0,
+                              "mega_tokens": 0, "resume_batches": 0,
+                              "resume_jobs": 0, "capacity_overruns": 0}
 
     # ------------------------------------------------------------------
     # executables & warmup
     # ------------------------------------------------------------------
+    def _cache_clone(self):
+        """A sacrificial copy of the pool cache for warming donating
+        executables (the donated input is consumed by the call)."""
+        return jax.tree.map(jnp.copy, self.pool.cache)
+
     def _build_slot(self, level: int):
         """Slot executable for decode-reservation ``level``: the prefill
         chunk is C - level tokens.  Pre-establishing == compiling now;
@@ -157,10 +259,29 @@ class ServingEngine:
         if self.policy.preestablish:
             fn = self._prefill_fn
         else:
-            _, raw_p = _raw_fns(self.mcfg, self.ecfg.moe_mode)
+            _, raw_p, _, _, _ = _raw_fns(self.mcfg, self.ecfg.moe_mode)
             fn = jax.jit(raw_p)          # fresh cache -> real recompile
         self._warm_prefill(fn, chunk)
         return {"chunk": chunk, "fn": fn}
+
+    def _build_megastep(self, level: int):
+        """Megastep executable fusing ``level`` decode iterations."""
+        if self.policy.preestablish:
+            fn = self._ex.megastep(level)
+        else:
+            # No-Green ablation: a fresh jit so on-demand construction
+            # pays real XLA compilation inside the serving path (the
+            # shared _EXEC_CACHE executable would already be compiled)
+            _, _, _, raw_m, _ = _raw_fns(self.mcfg, self.ecfg.moe_mode)
+            fn = jax.jit(functools.partial(raw_m, num_steps=level),
+                         donate_argnums=(1,))
+        B = self.ecfg.num_slots
+        toks, _, _, _ = fn(self.params, self._cache_clone(),
+                           jnp.zeros((B,), jnp.int32),
+                           jnp.zeros((B,), jnp.int32),
+                           jnp.zeros((B,), bool))
+        jax.block_until_ready(toks)
+        return {"steps": level, "fn": fn}
 
     def _warm_prefill(self, fn, chunk: int) -> None:
         toks = jnp.zeros((1, chunk), jnp.int32)
@@ -168,14 +289,30 @@ class ServingEngine:
                    jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1))
         jax.block_until_ready(lg)
 
-    def _warm_shared(self) -> None:
-        lg, _ = self._decode_fn(
-            self.params, self.pool.cache,
-            jnp.zeros((self.ecfg.num_slots,), jnp.int32),
-            jnp.zeros((self.ecfg.num_slots,), jnp.int32))
+    def _warm_resume(self, m: int, bucket: int) -> None:
+        lg, _ = self._ex.resume(
+            self.params, self._cache_clone(),
+            jnp.zeros((m, bucket), jnp.int32),
+            jnp.arange(m, dtype=jnp.int32),
+            jnp.zeros((m,), jnp.int32),
+            jnp.full((m,), bucket - 1, jnp.int32))
         jax.block_until_ready(lg)
-        for b in _resume_buckets(self.ecfg):
-            self._warm_prefill(self._prefill_fn, b)
+
+    def _warm_shared(self) -> None:
+        B = self.ecfg.num_slots
+        zeros_b = jnp.zeros((B,), jnp.int32)
+        lg, _ = self._decode_fn(self.params, self.pool.cache, zeros_b,
+                                zeros_b)
+        jax.block_until_ready(lg)
+        nt, _, _ = self._ex.fused(self.params, self._cache_clone(), zeros_b,
+                                  zeros_b, jnp.zeros((B,), bool))
+        jax.block_until_ready(nt)
+        if self.policy.resume_to_decode_queue:
+            for m in self._resume_levels:
+                for b in self._buckets:
+                    self._warm_resume(m, b)
+        if self.policy.whole_prefill:
+            self._warm_prefill(self._prefill_fn, self._buckets[-1])
         if not self.policy.chunk_by_slots and not self.policy.whole_prefill:
             self._warm_prefill(self._prefill_fn, self._fixed_chunk())
 
@@ -185,18 +322,22 @@ class ServingEngine:
         return max(g, (c // g) * g)
 
     # ------------------------------------------------------------------
-    # work execution
+    # prefill work execution
     # ------------------------------------------------------------------
     def _run_prefill_tokens(self, sess: Session, shape_len: int,
                             take: Optional[int] = None,
                             fn: Optional[Callable] = None) -> None:
         """Prefill up to ``take`` real tokens (default: fill the shape)
         of the session's current turn in an executable of token-shape
-        ``shape_len`` — shorter work is padded and masked."""
+        ``shape_len`` — shorter work is padded and masked.  The call is
+        dispatched asynchronously; the host only blocks on the logits
+        when this chunk completes the prefill."""
         take = min(take if take is not None else shape_len, shape_len,
                    self._aligned_remaining(sess))
         if take <= 0:
             return
+        if self.pool.lengths[sess.slot] + take > self.ecfg.max_seq - 1:
+            self.hotpath_stats["capacity_overruns"] += 1  # DESIGN.md §3
         turn = sess.current_turn
         toks = turn.prefill_tokens[sess.prefill_done: sess.prefill_done + take]
         pad = shape_len - take
@@ -208,21 +349,22 @@ class ServingEngine:
             jnp.asarray(toks[None], jnp.int32),
             jnp.int32(sess.slot), jnp.int32(self.pool.lengths[sess.slot]),
             jnp.int32(take - 1))
-        logits = jax.block_until_ready(logits)
         self.pool.cache = new_cache
         self.pool.lengths[sess.slot] += take
         sess.prefill_done += take
         sess.cached_len = int(self.pool.lengths[sess.slot])
+        self._maybe_register_prefix(sess)
+        if sess.remaining_prefill == 0:
+            self._finish_prefill(sess, np.asarray(logits))
 
-        # prefix registration at the shared-prompt boundary (cold only)
+    def _maybe_register_prefix(self, sess: Session) -> None:
+        """Prefix registration at the shared-prompt boundary (cold only)."""
         if (sess.turn_idx == 0 and sess.shared_prefix_len > 0
                 and sess.cached_len == sess.shared_prefix_len
                 and sess.prefill_done == sess.shared_prefix_len):
             self.pool.register_prefix(
-                sess.slot, turn.prefill_tokens[:sess.shared_prefix_len])
-
-        if sess.remaining_prefill == 0:
-            self._finish_prefill(sess, np.asarray(logits))
+                sess.slot,
+                sess.turns[0].prefill_tokens[:sess.shared_prefix_len])
 
     def _aligned_remaining(self, s: Session) -> int:
         """Remaining prefill, capped at the shared-prefix boundary so the
@@ -234,6 +376,8 @@ class ServingEngine:
         return rem
 
     def _finish_prefill(self, sess: Session, last_logits: np.ndarray) -> None:
+        self._flush_decode()             # decode membership changes below
+        self._dev_dirty = True
         now = self._clock()
         sess.last_token = int(last_logits.argmax())
         sess.first_token_s.append(now)
@@ -241,27 +385,111 @@ class ServingEngine:
         sess.decoded = 1
         self._after_token(sess, now)
 
-    def _decode_step(self, active: Sequence[Session]) -> None:
-        tokens = np.zeros((self.ecfg.num_slots,), np.int32)
-        mask = np.zeros((self.ecfg.num_slots,), bool)
+    # ------------------------------------------------------------------
+    # decode stream (device-resident)
+    # ------------------------------------------------------------------
+    def _sync_device_state(self, active: Sequence[Session]) -> None:
+        """Rebuild the device token/length/mask arrays from host mirrors.
+        Only happens when decode membership changed (joins, leaves,
+        restores) — every such event passes through a flush, so the host
+        mirrors are exact at this point."""
+        ids = [s.session_id for s in active]
+        if not self._dev_dirty and ids == self._dev_ids:
+            return
+        if self._window_steps:
+            self._flush_decode()
+        B = self.ecfg.num_slots
+        tokens = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
         for s in active:
             tokens[s.slot] = s.last_token
             mask[s.slot] = True
-        logits, new_cache = self._decode_fn(
-            self.params, self.pool.cache, jnp.asarray(tokens),
-            self.pool.lengths_device())
-        logits = np.asarray(jax.block_until_ready(logits))
-        self.pool.commit(new_cache, mask)
-        now = self._clock()
-        if self._last_decode_end is not None:
-            self.scheduler.record_decode_step(now - self._last_decode_end)
-        self._last_decode_end = now
+        self._dev_tokens = jnp.asarray(tokens)
+        self._dev_mask = jnp.asarray(mask)
+        self._dev_lengths = jnp.asarray(self.pool.lengths)
+        self._dev_ids = ids
+        self._dev_dirty = False
+
+    def _decode_dispatch(self, active: Sequence[Session], now: float,
+                         next_ctrl: float, q_d: int, q_p: int) -> None:
+        """Dispatch one fused decode step — or a K-step megastep when
+        both queues are empty and no control update is due before the
+        boundary — without blocking on the result."""
+        ecfg = self.ecfg
+        if (self._window_sessions
+                and [s.session_id for s in self._window_sessions]
+                != [s.session_id for s in active]):
+            self._flush_decode()         # defensive: membership changed
+        k_alive = min(s.current_turn.decode_len - s.decoded for s in active)
+        k_cap = (ecfg.max_seq - 1
+                 - max(int(self.pool.lengths[s.slot]) for s in active))
+        if k_cap < 1:
+            # a lane is at the usable capacity (max_seq - 1 rows; the
+            # last row is the hot-path scratch row — DESIGN.md §3).
+            # Proceed like the seed did at max_seq, but count it.
+            self.hotpath_stats["capacity_overruns"] += 1
+            k_cap = 1
+        exe, K = None, 1
+        if self.megasteps is not None and q_d == 0 and q_p == 0:
+            k_fit = k_alive
+            tpot_s = self.scheduler.state.tpot_step_ms / 1000.0
+            if tpot_s > 0:
+                k_fit = max(1, int((next_ctrl - now) / tpot_s))
+            bound = self.megasteps.bind_down(min(k_alive, k_cap, k_fit))
+            if bound is not None:
+                exe, K = bound[0]["fn"], bound[1]
+        if self._window_steps + K > ecfg.telemetry_sample_steps:
+            self._flush_decode()
+        self._sync_device_state(active)
+        if self._window_t0 is None:
+            self._window_t0 = self._clock()
+        if exe is not None:
+            _, nt, nc, nl = exe(self.params, self.pool.cache,
+                                self._dev_tokens, self._dev_lengths,
+                                self._dev_mask)
+            self.hotpath_stats["megasteps"] += 1
+            self.hotpath_stats["mega_tokens"] += K * len(active)
+        else:
+            nt, nc, nl = self._ex.fused(self.params, self.pool.cache,
+                                        self._dev_tokens, self._dev_lengths,
+                                        self._dev_mask)
+            self.hotpath_stats["fused_steps"] += 1
+        self._dev_tokens, self._dev_lengths = nt, nl
+        self.pool.cache = nc
+        self._window_steps += K
+        self._window_sessions = list(active)
+        burst_done = False
         for s in active:
-            self.pool.lengths[s.slot] += 1
+            s.decoded += K
+            self.pool.lengths[s.slot] += K
             s.cached_len = int(self.pool.lengths[s.slot])
-            s.last_token = int(logits[s.slot].argmax())
-            s.token_times_s.append(now)
-            s.decoded += 1
+            burst_done |= s.decoded >= s.current_turn.decode_len
+        if burst_done:
+            self._flush_decode()
+
+    def _flush_decode(self) -> None:
+        """Sampled-cadence host sync: block on the decode stream, record
+        the aggregate inter-emission gap (TPOT x steps) and assign token
+        timestamps interpolated across the window."""
+        n = self._window_steps
+        if n == 0:
+            return
+        jax.block_until_ready(self._dev_tokens)
+        now = self._clock()
+        t0 = self._window_t0
+        if t0 is not None and now > t0:
+            self.scheduler.record_decode_step(now - t0, steps=n)
+            ts = [t0 + (now - t0) * (i + 1) / n for i in range(n)]
+        else:
+            ts = [now] * n
+        toks = np.asarray(self._dev_tokens)
+        sessions = self._window_sessions
+        self._window_sessions = []
+        self._window_steps = 0
+        self._window_t0 = now
+        for s in sessions:
+            s.last_token = int(toks[s.slot])
+            s.token_times_s.extend(ts)
             self._after_token(s, now)
 
     def _after_token(self, sess: Session, now: float) -> None:
@@ -269,6 +497,7 @@ class ServingEngine:
         if sess.decoded < turn.decode_len:
             sess.state = SessionState.DECODING
             return
+        self._dev_dirty = True           # session leaves the decode stream
         if sess.turn_idx + 1 >= len(sess.turns):
             sess.state = SessionState.FINISHED
             self.pool.free(sess.slot)
@@ -278,6 +507,64 @@ class ServingEngine:
         sess.decoded = 0
         sess.state = SessionState.TOOL_CALL
         sess.ready_s = now + sess.turns[sess.turn_idx - 1].tool_latency_s
+
+    # ------------------------------------------------------------------
+    # resume prefills (batched, fused into the decode stream)
+    # ------------------------------------------------------------------
+    def _resume_batch_step(self, by_id: Dict[int, Session]) -> bool:
+        """Pack up to M resume jobs from Q_D into one [M, bucket]
+        executable with per-row slots/lengths.  M rounds down to a
+        warmed batch size; leftover jobs stay at the queue head."""
+        qd = self.queues.q_decode
+        jobs: List[Tuple[Job, Session]] = []
+        while qd and len(jobs) < self._resume_levels[-1]:
+            job = qd.popleft()
+            s = by_id[job.session_id]
+            if s.state == SessionState.PREFILLING and s.remaining_prefill > 0:
+                jobs.append((job, s))
+        if not jobs:
+            return False
+        m = max(lv for lv in self._resume_levels if lv <= len(jobs))
+        for job, _ in reversed(jobs[m:]):
+            qd.appendleft(job)           # untouched leftovers keep order
+        jobs = jobs[:m]
+
+        takes, bucket = [], self._buckets[0]
+        for _, s in jobs:
+            aligned = self._aligned_remaining(s)
+            bucket = max(bucket, self._bucket_for(max(aligned, 1)))
+            takes.append(aligned)
+        takes = [min(t, bucket) for t in takes]
+        toks = np.zeros((m, bucket), np.int32)
+        for i, (_, s) in enumerate(jobs):
+            row = s.current_turn.prefill_tokens[
+                s.prefill_done: s.prefill_done + takes[i]]
+            toks[i, :takes[i]] = row
+        slots = np.asarray([s.slot for _, s in jobs], np.int32)
+        lens = np.asarray([self.pool.lengths[s.slot] for _, s in jobs],
+                          np.int32)
+        logit_idx = np.asarray([t - 1 for t in takes], np.int32)
+
+        logits, new_cache = self._ex.resume(
+            self.params, self.pool.cache, jnp.asarray(toks),
+            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx))
+        self.pool.cache = new_cache
+        self.hotpath_stats["resume_batches"] += 1
+        self.hotpath_stats["resume_jobs"] += m
+
+        np_logits: Optional[np.ndarray] = None
+        for i, (job, s) in enumerate(jobs):
+            self.pool.lengths[s.slot] += takes[i]
+            s.prefill_done += takes[i]
+            s.cached_len = int(self.pool.lengths[s.slot])
+            self._maybe_register_prefix(s)
+            if s.remaining_prefill == 0:
+                if np_logits is None:
+                    np_logits = np.asarray(logits)
+                self._finish_prefill(s, np_logits[i])
+            else:
+                qd.append(job)           # continue next cycle
+        return True
 
     # ------------------------------------------------------------------
     # admission
@@ -349,6 +636,7 @@ class ServingEngine:
 
             # ---- control update + slot rebind (Algorithm 1) ----------
             if now >= next_ctrl:
+                self._flush_decode()     # fresh TPOT for the controller
                 if policy.adaptive:
                     self.scheduler.update()
                 next_ctrl = now + ecfg.control_interval_s
@@ -361,21 +649,15 @@ class ServingEngine:
             # ---- decode stream ----------------------------------------
             allow_decode = policy.protect_decode or q_p == 0
             if active and allow_decode:
-                self._decode_step(active)
+                self._decode_dispatch(active, now, next_ctrl, q_d, q_p)
                 did_work = True
             elif not active:
-                self._last_decode_end = None
+                self._flush_decode()
+                self._window_t0 = None
 
             # ---- resume prefills fused into the decode stream --------
             if policy.resume_to_decode_queue and self.queues.q_decode:
-                job = self.queues.q_decode.popleft()
-                s = by_id[job.session_id]
-                if s.state == SessionState.PREFILLING:
-                    bucket = self._bucket_for(max(s.remaining_prefill, 1))
-                    self._run_prefill_tokens(s, bucket)
-                    did_work = True
-                    if s.state == SessionState.PREFILLING:
-                        self.queues.q_decode.append(job)  # continue next cycle
+                did_work |= self._resume_batch_step(by_id)
 
             # ---- prefill stream (cold / over-budget / phase-blind) ----
             did_work |= self._prefill_stream_step(by_id, slot_exec)
@@ -399,6 +681,7 @@ class ServingEngine:
             if not did_work:
                 time.sleep(0.0005)
 
+        self._flush_decode()
         wall = self._clock()
         extra = {
             "rebinds": float(self.slots.stats.rebinds),
@@ -406,15 +689,16 @@ class ServingEngine:
             "slot_misses": float(self.slots.stats.misses),
             "prefix_hits": float(self.pool.stats["prefix_hits"]),
         }
+        extra.update({k: float(v) for k, v in self.hotpath_stats.items()})
         return build_report(policy.name, list(sessions), wall, thresholds,
                             extra)
 
     # ------------------------------------------------------------------
     def _bucket_for(self, n: int) -> int:
-        for b in _resume_buckets(self.ecfg):
+        for b in self._buckets:
             if b >= n:
                 return b
-        return _resume_buckets(self.ecfg)[-1]
+        return self._buckets[-1]
 
     def _prefill_stream_step(self, by_id, slot_exec) -> bool:
         if not self.queues.q_prefill:
@@ -430,7 +714,7 @@ class ServingEngine:
             raise RuntimeError("fully-cached request needs >=1 new token")
         if self.policy.whole_prefill:
             # llama.cpp-style: run the entire prompt to completion now
-            bucket = max(_resume_buckets(self.ecfg))
+            bucket = self._buckets[-1]
             while s.state == SessionState.PREFILLING:
                 self._run_prefill_tokens(s, bucket)
             self.queues.q_prefill.popleft()
@@ -445,4 +729,3 @@ class ServingEngine:
         if s.state != SessionState.PREFILLING:
             self.queues.q_prefill.popleft()
         return True
-

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import init_cache
+from repro.models import POSITIONAL_CACHE_KEYS, init_cache
 
 
 def _prefix_key(tokens: np.ndarray) -> str:
@@ -41,6 +41,7 @@ class PrefixEntry:
     snapshot: Any          # pytree: each cache leaf's [:, slot] rows
     length: int
     refs: int = 0
+    last_used: int = 0     # LRU tick (register / lookup-hit time)
 
 
 class KVCachePool:
@@ -56,6 +57,10 @@ class KVCachePool:
         self._free = set(range(num_slots))
         self._prefix: Dict[str, PrefixEntry] = {}
         self.max_prefix_entries = max_prefix_entries
+        self._tick = 0                      # LRU clock for prefix entries
+        self._has_state_leaves = any(
+            not set(layer) <= POSITIONAL_CACHE_KEYS
+            for layer in self.cache.values())
         self.stats = {"alloc": 0, "free": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "evictions": 0}
 
@@ -66,8 +71,22 @@ class KVCachePool:
         slot = min(self._free)
         self._free.discard(slot)
         self.lengths[slot] = 0
+        if self._has_state_leaves:
+            self.reset_slot_state(slot)
         self.stats["alloc"] += 1
         return slot
+
+    def reset_slot_state(self, slot: int) -> None:
+        """Zero the slot's *stateful* (SSM) leaves.  Attention KV rows
+        are naturally fenced by ``lengths``, but a recurrent state is a
+        full-tensor summary: a freed session's state must not seed the
+        next occupant's prefill."""
+        def zero(layer):
+            if set(layer) <= POSITIONAL_CACHE_KEYS:
+                return layer
+            return {k: v.at[:, slot].set(0) for k, v in layer.items()}
+        self.cache = {name: zero(layer)
+                      for name, layer in self.cache.items()}
 
     def free(self, slot: int) -> None:
         self._free.add(slot)
@@ -87,14 +106,17 @@ class KVCachePool:
         if len(self._prefix) >= self.max_prefix_entries:
             self._evict_one()
         snap = jax.tree.map(lambda leaf: leaf[:, slot], self.cache)
+        self._tick += 1
         self._prefix[_prefix_key(tokens)] = PrefixEntry(
-            snapshot=snap, length=len(tokens))
+            snapshot=snap, length=len(tokens), last_used=self._tick)
 
     def lookup(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
         entry = self._prefix.get(_prefix_key(tokens))
         if entry is not None:
             self.stats["prefix_hits"] += 1
             entry.refs += 1
+            self._tick += 1
+            entry.last_used = self._tick
         else:
             self.stats["prefix_misses"] += 1
         return entry
@@ -107,9 +129,13 @@ class KVCachePool:
         self.lengths[dst_slot] = entry.length
 
     def _evict_one(self) -> None:
+        """Evict the least-recently-used entry.  (Min-``refs`` eviction —
+        the previous policy — permanently favours old hot prefixes and
+        thrashes fresh ones: a new deployment's prompt always has the
+        fewest hits and is evicted first, forever.)"""
         if not self._prefix:
             return
-        key = min(self._prefix, key=lambda k: self._prefix[k].refs)
+        key = min(self._prefix, key=lambda k: self._prefix[k].last_used)
         del self._prefix[key]
         self.stats["evictions"] += 1
 

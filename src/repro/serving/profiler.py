@@ -46,8 +46,8 @@ def profile_throughput(mcfg: ModelConfig, params, *,
     ecfg = ecfg or EngineConfig()
     C, g = ecfg.cycle_budget, ecfg.granularity
     levels = np.arange(g, C + 1, g)
-    decode_fn, prefill_fn = get_executables(
-        mcfg, ecfg.num_slots, ecfg.max_seq, ecfg.moe_mode)
+    ex = get_executables(mcfg, ecfg.num_slots, ecfg.max_seq, ecfg.moe_mode)
+    decode_fn, prefill_fn = ex.decode, ex.prefill
     pool = KVCachePool(mcfg, ecfg.num_slots, ecfg.max_seq, dtype)
     B = ecfg.num_slots
     ctx_long = ecfg.max_seq // 2

@@ -1,10 +1,14 @@
 """Competitive-ratio analysis (§III-B): Theorem 1 / Corollary 2 bounds
 validated against brute-force offline optima over random monotone
 profiles (hypothesis)."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis",
+    reason="wholly property-based module; pip install -r requirements-dev.txt")
+import hypothesis.strategies as st              # noqa: E402
+from hypothesis import given, settings          # noqa: E402
 
 from repro.core import competitive as comp
 

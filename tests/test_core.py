@@ -1,8 +1,7 @@
 """Core AgentServe unit + property tests: phase classifier, Algorithm 1
 control law, slot quantisation, dual-queue admission invariants."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.admission import AdmissionQueues, Job
 from repro.core.phases import Phase, PhaseThresholds, classify

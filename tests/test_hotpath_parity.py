@@ -1,0 +1,241 @@
+"""Device-resident hot-path parity (DESIGN.md §3).
+
+The fused decode step, the K-step megastep and the batched resume
+prefill must be *semantically invisible*: identical token streams and
+cache state to the seed per-step path (host argmax + where-select
+commit + serial batch-1 resume), for both attention and Mamba/hybrid
+stacks.  Plus interpret-mode parity for the block-skipping decode
+kernel against the naive oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import ops, ref
+from repro.models import (POSITIONAL_CACHE_KEYS, forward_decode,
+                          forward_decode_fused, forward_decode_megastep,
+                          forward_prefill, forward_resume_batch, init_cache,
+                          init_params)
+from repro.serving.kvcache import KVCachePool
+
+HYBRID = ModelConfig(name="tiny-hybrid-hp", family="hybrid", num_layers=2,
+                     d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                     vocab_size=128, tie_embeddings=True,
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32, chunk_size=32),
+                     hybrid_period=2, hybrid_attn_index=0, source="test")
+
+B, S_CACHE, CTX = 4, 64, 12
+
+
+def _params_for(cfg):
+    return init_params(cfg, jax.random.PRNGKey(1))
+
+
+def _ctx_cache(params, cfg):
+    """A cache with CTX real tokens in every slot (batch-B prefill)."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, CTX)).astype(np.int32)
+    cache = init_cache(cfg, B, S_CACHE)
+    logits, cache, lengths = forward_prefill(
+        params, cfg, jnp.asarray(toks), cache, jnp.zeros((B,), jnp.int32),
+        moe_mode="dense")
+    tokens = np.asarray(jnp.argmax(logits, -1), np.int32)
+    return cache, np.asarray(lengths, np.int32), tokens
+
+
+def _seed_decode(params, cfg, cache, tokens, lengths, mask, steps):
+    """The seed engine's per-step path: decode -> host argmax ->
+    where-select commit (KVCachePool.commit semantics) -> host lengths."""
+    m = jnp.asarray(mask)
+    tokens, lengths = tokens.copy(), lengths.copy()
+    stream = []
+    for _ in range(steps):
+        logits, new_cache, _ = forward_decode(
+            params, cfg, jnp.asarray(tokens), cache, jnp.asarray(lengths),
+            moe_mode="dense")
+        logits = np.asarray(logits)
+
+        def sel(new, old):
+            shape = (1, new.shape[1]) + (1,) * (new.ndim - 2)
+            return jnp.where(m.reshape(shape), new, old)
+
+        cache = jax.tree.map(sel, new_cache, cache)
+        for b in range(len(tokens)):
+            if mask[b]:
+                tokens[b] = logits[b].argmax()
+                lengths[b] += 1
+        stream.append(tokens.copy())
+    return np.stack(stream), cache, lengths
+
+
+def _fused_decode(params, cfg, cache, tokens, lengths, mask, steps):
+    t = jnp.asarray(tokens)
+    l = jnp.asarray(lengths)
+    a = jnp.asarray(mask)
+    stream = []
+    for _ in range(steps):
+        t, cache, l = forward_decode_fused(params, cfg, t, cache, l, a,
+                                           moe_mode="dense")
+        stream.append(np.asarray(t, np.int32))
+    return np.stack(stream), cache, np.asarray(l, np.int32)
+
+
+def _assert_cache_close(got, want, *, skip_scratch_row=True):
+    """Compare caches leaf-wise.  For positional (attention KV) leaves
+    the scratch (last) sequence row is excluded: the fused path parks
+    inactive lanes' writes there by design."""
+    for name, layer in want.items():
+        positional = set(layer) <= POSITIONAL_CACHE_KEYS
+        for k in layer:
+            g, w = got[name][k], layer[k]
+            if positional and skip_scratch_row:
+                g, w = g[:, :, :-1], w[:, :, :-1]
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5,
+                err_msg=f"{name}/{k}")
+
+
+@pytest.mark.parametrize("cfg", [None, HYBRID], ids=["dense", "hybrid"])
+def test_fused_decode_matches_seed_path(cfg, tiny_cfg):
+    cfg = cfg or tiny_cfg
+    params = _params_for(cfg)
+    cache, lengths, tokens = _ctx_cache(params, cfg)
+    mask = np.array([True, False, True, True])
+    c2 = jax.tree.map(jnp.copy, cache)
+    want_stream, want_cache, want_len = _seed_decode(
+        params, cfg, cache, tokens, lengths, mask, steps=6)
+    got_stream, got_cache, got_len = _fused_decode(
+        params, cfg, c2, tokens, lengths, mask, steps=6)
+    # inactive lanes: seed leaves the token unchanged, fused keeps input
+    np.testing.assert_array_equal(got_stream[:, mask], want_stream[:, mask])
+    np.testing.assert_array_equal(got_stream[:, ~mask],
+                                  np.broadcast_to(tokens[~mask],
+                                                  got_stream[:, ~mask].shape))
+    np.testing.assert_array_equal(got_len, want_len)
+    _assert_cache_close(got_cache, want_cache)
+
+
+@pytest.mark.parametrize("cfg", [None, HYBRID], ids=["dense", "hybrid"])
+def test_megastep_matches_repeated_fused(cfg, tiny_cfg):
+    cfg = cfg or tiny_cfg
+    params = _params_for(cfg)
+    cache, lengths, tokens = _ctx_cache(params, cfg)
+    mask = np.array([True, True, False, True])
+    K = 5
+    c2 = jax.tree.map(jnp.copy, cache)
+    want_stream, want_cache, want_len = _fused_decode(
+        params, cfg, cache, tokens, lengths, mask, steps=K)
+    toks_seq, last, got_cache, got_len = forward_decode_megastep(
+        params, cfg, jnp.asarray(tokens), c2, jnp.asarray(lengths),
+        jnp.asarray(mask), num_steps=K, moe_mode="dense")
+    np.testing.assert_array_equal(np.asarray(toks_seq), want_stream)
+    np.testing.assert_array_equal(np.asarray(last), want_stream[-1])
+    np.testing.assert_array_equal(np.asarray(got_len), want_len)
+    _assert_cache_close(got_cache, want_cache)
+
+
+@pytest.mark.parametrize("cfg", [None, HYBRID], ids=["dense", "hybrid"])
+def test_batched_resume_matches_serial(cfg, tiny_cfg):
+    cfg = cfg or tiny_cfg
+    params = _params_for(cfg)
+    cache, lengths, _ = _ctx_cache(params, cfg)
+    rng = np.random.default_rng(3)
+    slots = [0, 2, 3]
+    takes = [5, 9, 16]
+    bucket = 16
+    rows = np.zeros((len(slots), bucket), np.int32)
+    for i, t in enumerate(takes):
+        rows[i, :t] = rng.integers(0, cfg.vocab_size, size=t)
+
+    # serial seed path: per-row slice -> batch-1 prefill -> update-slice
+    serial_cache = jax.tree.map(jnp.copy, cache)
+    serial_logits = []
+    for i, slot in enumerate(slots):
+        sub = jax.tree.map(
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+            serial_cache)
+        lg, sub2, _ = forward_prefill(
+            params, cfg, jnp.asarray(rows[i][None]), sub,
+            jnp.asarray([lengths[slot]], jnp.int32), moe_mode="dense",
+            logit_idx=jnp.asarray([takes[i] - 1], jnp.int32))
+        serial_cache = jax.tree.map(
+            lambda full, s, _slot=slot: jax.lax.dynamic_update_slice_in_dim(
+                full, s, _slot, axis=1),
+            serial_cache, sub2)
+        serial_logits.append(np.asarray(lg[0]))
+
+    logits, got_cache = forward_resume_batch(
+        params, cfg, jnp.asarray(rows), cache,
+        jnp.asarray(slots, jnp.int32),
+        jnp.asarray([lengths[s] for s in slots], jnp.int32),
+        jnp.asarray([t - 1 for t in takes], jnp.int32), moe_mode="dense")
+    logits = np.asarray(logits)
+    np.testing.assert_allclose(logits, np.stack(serial_logits),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(logits.argmax(-1),
+                                  np.stack(serial_logits).argmax(-1))
+    _assert_cache_close(got_cache, serial_cache, skip_scratch_row=False)
+
+
+def test_decode_kernel_block_skip_parity():
+    """interpret=True parity for the revisit-block index maps: short
+    lengths leave most KV tiles out of range (skipped), output must
+    still match the naive oracle."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    Bq, S, H, Hk, hd = 3, 256, 4, 2, 32
+    q = jax.random.normal(k1, (Bq, 1, H, hd))
+    kc = jax.random.normal(k2, (Bq, S, Hk, hd))
+    vc = jax.random.normal(k3, (Bq, S, Hk, hd))
+    for lens in ([1, 37, 256], [5, 5, 5], [33, 64, 200]):
+        lengths = jnp.asarray(lens, jnp.int32)
+        out = ops.flash_decode(q, kc, vc, lengths, block_k=32,
+                               interpret=True)
+        exp = ref.naive_decode_attention(q, kc, vc, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_alloc_resets_stale_ssm_state():
+    """A freed slot's recurrent state must not seed the next session's
+    prefill (attention KV is fenced by lengths; SSM state is not)."""
+    pool = KVCachePool(HYBRID, 2, 32)
+    s = pool.alloc()
+    pool.cache = jax.tree.map(lambda l: l + 1.0, pool.cache)
+    pool.free(s)
+    s2 = pool.alloc()
+    assert s2 == s
+    for name, layer in pool.cache.items():
+        for k, leaf in layer.items():
+            rows = np.asarray(leaf[:, s2])
+            if set(layer) <= POSITIONAL_CACHE_KEYS:
+                np.testing.assert_array_equal(rows, np.ones_like(rows))
+            else:
+                np.testing.assert_array_equal(rows, np.zeros_like(rows))
+
+
+def test_engine_hybrid_end_to_end():
+    """The device-resident engine serves a Mamba/attention hybrid stack
+    end to end (the seed engine was only ever exercised on dense)."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.policies import POLICIES
+    from repro.serving.request import SessionState
+    from repro.serving.workload import make_workload
+
+    params = _params_for(HYBRID)
+    ecfg = EngineConfig(num_slots=4, max_seq=256, cycle_budget=40,
+                        granularity=8, b_min=8, b_max=32, b_init=16,
+                        delta_b=8, control_interval_s=0.05, max_wall_s=90.0,
+                        megastep_max=4, resume_batch_max=2)
+    sessions = make_workload(2, vocab_size=HYBRID.vocab_size,
+                             token_scale=0.03, num_system_prompts=1,
+                             seed=5, stagger_s=0.05)
+    eng = ServingEngine(HYBRID, params, POLICIES["agentserve"], ecfg)
+    rep = eng.run(sessions)
+    assert all(s.state == SessionState.FINISHED for s in sessions)
+    for s in sessions:
+        assert s.output_tokens() == sum(t.decode_len for t in s.turns)
+    assert rep.total_output_tokens > 0

@@ -1,11 +1,10 @@
 """MoE and Mamba-2 layer-level tests: path equivalence, capacity
 semantics, router properties, SSD chunk/step equivalence."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.configs.base import MoEConfig, SSMConfig
 from repro.models import mamba2

@@ -54,11 +54,17 @@ def test_int8_cache_halves_bytes():
     assert ratio < 0.6, ratio      # int8 + 1/hd scale overhead
 
 
+def _make_mesh_compat():
+    """``axis_types`` only exists on newer jax; the pinned 0.4.x
+    toolchain defaults to the same (Auto) behaviour without it."""
+    at = getattr(jax.sharding, "AxisType", None)
+    kw = {"axis_types": (at.Auto,) * 2} if at is not None else {}
+    return jax.make_mesh((4, 2), ("data", "model"), **kw)
+
+
 def _seqpar_env():
     from repro.distributed.context import SPMDContext
-    mesh = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh_compat()
     return SPMDContext(mesh=mesh, dp_axes=("data",), tp_axis="model")
 
 
@@ -75,8 +81,9 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.models.attention import decode_attention_seqpar, quantize_kv
 from repro.kernels import ref
 from repro.distributed.context import SPMDContext
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+at = getattr(jax.sharding, "AxisType", None)
+kw = {"axis_types": (at.Auto,)*2} if at is not None else {}
+mesh = jax.make_mesh((4, 2), ("data", "model"), **kw)
 spmd = SPMDContext(mesh=mesh, dp_axes=("data",), tp_axis="model")
 B, S, H, Hk, hd = 2, 64, 4, 2, 16
 ks_ = jax.random.split(jax.random.PRNGKey(0), 5)

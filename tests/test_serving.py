@@ -1,11 +1,10 @@
 """Serving substrate: KV pool invariants (hypothesis), workload Table-I
 distributions, metrics, and an end-to-end engine run per policy."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models import init_params
@@ -52,6 +51,31 @@ def test_prefix_snapshot_roundtrip():
         np.testing.assert_array_equal(np.asarray(leaf[:, d]),
                                       np.asarray(leaf[:, s]))
     assert pool.lookup(np.arange(11, dtype=np.int32)) is None
+
+
+def test_prefix_eviction_is_lru():
+    """Eviction must be least-recently-used, not min-refs: under
+    min-refs an old hot prefix (many hits) can never be displaced and a
+    fresh deployment's prompt is thrashed forever."""
+    pool = KVCachePool(TINY, 4, 64, max_prefix_entries=2)
+    slot = pool.alloc()
+    a = np.arange(5, dtype=np.int32)
+    b = np.arange(6, dtype=np.int32)
+    c = np.arange(7, dtype=np.int32)
+
+    def reg(tokens):
+        pool.lengths[slot] = len(tokens)
+        pool.register_prefix(slot, tokens)
+
+    reg(a)
+    for _ in range(3):                      # a: hot (3 hits) but stale
+        assert pool.lookup(a) is not None
+    reg(b)                                  # b: fresh, zero hits
+    reg(c)                                  # at capacity -> evict LRU (a)
+    assert pool.lookup(b) is not None       # fresh prefix survives
+    assert pool.lookup(c) is not None
+    assert pool.lookup(a) is None           # stale-hot one was evicted
+    assert pool.stats["evictions"] == 1
 
 
 @given(mask=st.lists(st.booleans(), min_size=4, max_size=4))
