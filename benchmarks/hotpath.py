@@ -155,6 +155,9 @@ def main():
     ap.add_argument("--steps", type=int, default=0,
                     help="decode steps per variant (0 = auto-calibrate)")
     ap.add_argument("--resume-reps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fixed small step/rep counts (CI perf-harness "
+                         "smoke: exercises every path, no stable numbers)")
     ap.add_argument("--out", default="BENCH_hotpath.json")
     args = ap.parse_args()
 
@@ -163,6 +166,8 @@ def main():
     ex = get_executables(cfg, ECFG.num_slots, ECFG.max_seq, ECFG.moe_mode)
 
     steps = args.steps
+    if args.smoke:
+        steps, args.resume_reps = steps or MEGA_K * 2, 3
     if steps <= 0:
         probe = bench_seed_steps(cfg, params, ex, 8)
         steps = int(np.clip(3.0 / probe, 32, 1500))     # ~3 s per variant

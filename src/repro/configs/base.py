@@ -86,6 +86,11 @@ class ModelConfig:
     mrope: bool = False          # qwen2-vl M-RoPE (3 rotary sections)
     mrope_sections: Tuple[int, int, int] = (16, 24, 24)
     frontend: str = "none"       # none | audio | vision  (sanctioned stubs)
+    # Serving prefill/resume attention path (DESIGN.md §4): "xla" = the
+    # pure-JAX blocked scan (reference; streams all max_seq KV tiles per
+    # chunk); "pallas" = the cache-aware Pallas kernel with scalar-
+    # prefetched length/offset tile pruning (interpret-mode on CPU).
+    prefill_kernel: str = "xla"
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     act: str = "swiglu"          # swiglu | gelu
@@ -137,7 +142,7 @@ class ModelConfig:
         if self.sliding_window:
             return self.sliding_window
         if shape_name == "long_500k" and self.family not in ("ssm", "hybrid"):
-            return 8_192  # sanctioned SWA decode variant (DESIGN.md §4)
+            return 8_192  # sanctioned SWA decode variant (DESIGN.md §5)
         return 0
 
     # ---- parameter counting (for roofline MODEL_FLOPS) ---------------

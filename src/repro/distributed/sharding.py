@@ -1,6 +1,6 @@
 """Path-based PartitionSpec rules for every architecture and input shape.
 
-Sharding scheme (DESIGN.md §5):
+Sharding scheme:
 
 * tensor parallelism over ``model`` (16-wide): attention/SSM head
   projections, MLP + expert d_ff, vocab for embed/lm_head.

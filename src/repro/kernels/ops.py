@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import flash_decode_bhgd
 from repro.kernels.moe_gmm import gmm_bcd
+from repro.kernels.prefill_attention import (flash_prefill_bhsd,
+                                             flash_prefill_quant_bhsd)
 from repro.kernels.ssd_scan import ssd_scan_bhsd
 
 
@@ -67,6 +69,56 @@ def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 2048,
                             block_k=min(block_k, kt.shape[2]),
                             interpret=interpret)
     return out.reshape(B, 1, H, hd)
+
+
+def _prefill_blocks(Sq: int, block_q: int) -> int:
+    """Query-tile size: capped at the (8-aligned) chunk length so short
+    serving chunks are not padded up to a full 128-row tile."""
+    return min(block_q, max(8, -(-Sq // 8) * 8))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_prefill(q, k_cache, v_cache, q_offset, lengths, *,
+                  causal: bool = True, window: int = 0, block_q: int = 128,
+                  block_k: int = 128, interpret: bool | None = None):
+    """Cache-aware chunk prefill. q: [B, Sq, H, hd]; caches:
+    [B, S, Hk, hd]; q_offset/lengths: [B] -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    block_q = _prefill_blocks(Sq, block_q)
+    block_k = min(block_k, k_cache.shape[1])
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)
+    kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), block_k, 2)
+    vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), block_k, 2)
+    out = flash_prefill_bhsd(qt, kt, vt, q_offset.astype(jnp.int32),
+                             lengths.astype(jnp.int32), causal=causal,
+                             window=window, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_prefill_quant(q, k_q, k_s, v_q, v_s, q_offset, lengths, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool | None = None):
+    """int8-KV chunk prefill. k_q/v_q: int8 [B, S, Hk, hd]; k_s/v_s:
+    [B, S, Hk, 1] scales -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    block_q = _prefill_blocks(Sq, block_q)
+    block_k = min(block_k, k_q.shape[1])
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)
+    tr = lambda x: _pad_seq(x.transpose(0, 2, 1, 3), block_k, 2)
+    out = flash_prefill_quant_bhsd(
+        qt, tr(k_q), tr(k_s), tr(v_q), tr(v_s), q_offset.astype(jnp.int32),
+        lengths.astype(jnp.int32), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,209 @@
+"""Pallas TPU cache-aware prefill attention: a [B, Sq] query chunk vs
+the resident KV cache [B, S_max].
+
+Serving prefills (cold chunks and resumes) attend a short query chunk
+against a cache whose *padded* extent S_max is far larger than the
+tokens actually written.  The XLA ``blocked_attention`` scan streams all
+S_max tiles per chunk regardless; this kernel makes the streamed bytes
+O(actual length) instead, the prefill analogue of the decode kernel's
+revisit-block trick (``decode_attention.py``):
+
+* ``q_offset``/``lengths`` arrive via scalar prefetch
+  (``PrefetchScalarGridSpec``) so they are available to the BlockSpec
+  index maps *before* the tile loop.
+* For query tile ``iq`` of row ``b`` the live KV range is
+  ``(first, last]`` in tile units, where ``last`` is bounded by both
+  causality (no key beyond ``q_offset + (iq+1)·block_q``) and the valid
+  length (no key beyond ``lengths[b]`` was ever written), and ``first``
+  prunes tiles wholly below the sliding window.
+* Tiles outside ``[first, last]`` map back to the ``last`` in-range tile
+  index; the Pallas pipeline elides the HBM->VMEM DMA when a block index
+  repeats across consecutive grid steps, and a ``pl.when`` guard skips
+  their compute.
+
+GQA is expressed in the index maps (query head ``h`` fetches kv head
+``h // group``) so KV tiles are fetched once per kv-head group.  The
+quantised-KV variant streams int8 values + per-position scales and
+dequantises per tile in VMEM — half the cache bytes, same pruning.
+
+Every query row must have >= 1 unmasked key (``q_offset + i <
+lengths``), which the serving path guarantees (``lengths`` counts the
+chunk itself); all-masked rows would reduce over an implementation-
+defined tile subset.  ``interpret=True`` validates the kernel body on
+CPU (no DMA elision there — parity only; CPU perf claims use the
+pruned-extent reference in ``benchmarks/prefill.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _tile_bounds(qoff_ref, len_ref, b, iq, *, block_q: int, block_k: int,
+                 causal: bool, window: int):
+    """(first, last) inclusive physical KV-tile bounds for query tile
+    ``iq`` of batch row ``b``.  Shared verbatim by the BlockSpec index
+    maps and the kernel-body compute guard — the pruning invariant is
+    that both always agree."""
+    q_lo = qoff_ref[b] + iq * block_q
+    limit = len_ref[b]
+    if causal:
+        limit = jnp.minimum(limit, q_lo + block_q)   # keys <= q_hi
+    last = jnp.maximum((limit + block_k - 1) // block_k, 1) - 1
+    if causal and window > 0:
+        first = jnp.maximum(q_lo - window + 1, 0) // block_k
+        first = jnp.minimum(first, last)
+    else:
+        first = jnp.zeros_like(last)
+    return first, last
+
+
+def _softmax_tile(q_scaled, k, v, mask, m_scr, l_scr, acc_scr):
+    """One online-softmax accumulation step over a [bq, bk] score tile."""
+    s = jax.lax.dot_general(
+        q_scaled, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # [bq, bk]
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[:, 0] = m_new
+
+
+def _kernel_common(qoff_ref, len_ref, q_ref, load_kv, o_ref,
+                   m_scr, l_scr, acc_scr, *, causal: bool, window: int,
+                   scale: float, block_q: int, block_k: int,
+                   num_kv_blocks: int):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    first, last = _tile_bounds(qoff_ref, len_ref, b, iq, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window)
+
+    @pl.when(first + ik <= last)
+    def _compute():
+        # the tile actually resident in VMEM (same remap as the index map)
+        k_start = jnp.minimum(first + ik, last) * block_k
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, hd]
+        k, v = load_kv()
+        q_pos = (qoff_ref[b] + iq * block_q
+                 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < len_ref[b]
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+            if window > 0:
+                mask = mask & (k_pos > q_pos - window)
+        _softmax_tile(q, k, v, mask, m_scr, l_scr, acc_scr)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _prefill_kernel(qoff_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_scr, l_scr, acc_scr, **kw):
+    def load_kv():
+        return (k_ref[0, 0].astype(jnp.float32),
+                v_ref[0, 0].astype(jnp.float32))
+    _kernel_common(qoff_ref, len_ref, q_ref, load_kv, o_ref,
+                   m_scr, l_scr, acc_scr, **kw)
+
+
+def _prefill_kernel_quant(qoff_ref, len_ref, q_ref, k_ref, ks_ref,
+                          v_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr, **kw):
+    def load_kv():
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0].astype(jnp.float32)
+        return k, v
+    _kernel_common(qoff_ref, len_ref, q_ref, load_kv, o_ref,
+                   m_scr, l_scr, acc_scr, **kw)
+
+
+def _build(q, kv_leaves, q_offset, lengths, kernel, *, causal: bool,
+           window: int, block_q: int, block_k: int, interpret: bool):
+    """Shared pallas_call assembly for the plain and quantised variants.
+    kv_leaves: list of (array [B, Hk, Sk, lastdim]) streamed with the
+    same pruned index map."""
+    B, H, Sq, hd = q.shape
+    Hk, Sk = kv_leaves[0].shape[1], kv_leaves[0].shape[2]
+    group = H // Hk
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / (hd ** 0.5)
+    bounds = functools.partial(_tile_bounds, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window)
+
+    def kv_index(b, h, iq, ik, qoff, lens):
+        # Tiles outside [first, last] revisit the last in-range tile: a
+        # repeated block index means the pipeline skips the HBM->VMEM
+        # copy (their compute is skipped by the kernel-body guard).
+        first, last = bounds(qoff, lens, b, iq)
+        return (b, h // group, jnp.minimum(first + ik, last), 0)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, iq, ik, qoff, lens: (b, h, iq, 0))
+    kv_specs = [pl.BlockSpec((1, 1, block_k, leaf.shape[3]), kv_index)
+                for leaf in kv_leaves]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, nq, nk),
+        in_specs=[q_spec] + kv_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik, qoff, lens: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(kernel, causal=causal, window=window,
+                             scale=scale, block_q=block_q, block_k=block_k,
+                             num_kv_blocks=nk)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q_offset, lengths, q, *kv_leaves)
+
+
+def flash_prefill_bhsd(q, k, v, q_offset, lengths, *, causal: bool = True,
+                       window: int = 0, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = False):
+    """q: [B, H, Sq, hd]; k/v: [B, Hk, Sk, hd]; q_offset/lengths: [B]
+    int32 -> [B, H, Sq, hd].  Sq/Sk are block multiples (caller pads)."""
+    return _build(q, [k, v], q_offset, lengths, _prefill_kernel,
+                  causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+def flash_prefill_quant_bhsd(q, k_q, k_s, v_q, v_s, q_offset, lengths, *,
+                             causal: bool = True, window: int = 0,
+                             block_q: int = 128, block_k: int = 128,
+                             interpret: bool = False):
+    """int8 KV variant: k_q/v_q: int8 [B, Hk, Sk, hd]; k_s/v_s:
+    [B, Hk, Sk, 1] scales.  Dequantisation happens per tile in VMEM."""
+    return _build(q, [k_q, k_s, v_q, v_s], q_offset, lengths,
+                  _prefill_kernel_quant, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=interpret)

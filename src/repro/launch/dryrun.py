@@ -13,7 +13,7 @@ Step functions per shape kind:
   prefill_32k  -> forward_cold (cold-prefill serving step, last logits)
   decode_32k   -> forward_decode against a seq_len KV cache (1 new token)
   long_500k    -> forward_decode; SSM/hybrid native, SWA window for the
-                  dense archs (DESIGN.md §4), skip for encoder-only.
+                  dense archs (DESIGN.md §5), skip for encoder-only.
 """
 import argparse
 import dataclasses
@@ -41,7 +41,7 @@ from repro.training.train_step import make_train_step
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
-# bf16 optimizer state for the giants so train_4k fits HBM (DESIGN.md §5)
+# bf16 optimizer state for the giants so train_4k fits HBM
 BF16_OPT_ARCHS = {"mixtral-8x22b", "jamba-1.5-large-398b"}
 
 

@@ -251,6 +251,41 @@ def blocked_attention_quant(
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def prefill_attention(q, k_cache, v_cache, *, q_offset, lengths,
+                      window: int = 0, block_size: int = 512,
+                      backend: str = "xla"):
+    """Serving prefill/resume attention: a [B, Sq] query chunk against
+    the resident KV cache [B, S_max] (chunk rows already written).
+
+    ``backend`` selects the execution path (``ModelConfig.prefill_kernel``):
+    "xla" runs the reference ``blocked_attention`` scan, which streams
+    every padded cache tile; "pallas" runs the cache-aware kernel whose
+    scalar-prefetched ``q_offset``/``lengths`` prune causally-dead and
+    never-written KV tiles from the DMA stream (DESIGN.md §4)."""
+    if backend == "pallas":
+        from repro.kernels.ops import flash_prefill
+        return flash_prefill(q, k_cache, v_cache, q_offset, lengths,
+                             causal=True, window=window)
+    return blocked_attention(q, k_cache, v_cache, q_offset=q_offset,
+                             lengths=lengths, causal=True, window=window,
+                             block_size=block_size)
+
+
+def prefill_attention_quant(q, k_q, k_s, v_q, v_s, *, q_offset, lengths,
+                            window: int = 0, block_size: int = 512,
+                            backend: str = "xla"):
+    """int8-KV serving prefill attention; same dispatch contract as
+    ``prefill_attention`` (the Pallas path dequantises per tile in VMEM
+    and applies the same tile pruning)."""
+    if backend == "pallas":
+        from repro.kernels.ops import flash_prefill_quant
+        return flash_prefill_quant(q, k_q, k_s, v_q, v_s, q_offset, lengths,
+                                   causal=True, window=window)
+    return blocked_attention_quant(q, k_q, k_s, v_q, v_s, q_offset=q_offset,
+                                   lengths=lengths, causal=True,
+                                   window=window, block_size=block_size)
+
+
 def quantize_kv(x):
     """x: [..., hd] bf16 -> (int8 values, per-(...) scale [..., 1])."""
     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0

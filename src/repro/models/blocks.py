@@ -15,8 +15,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import mamba2
 from repro.models.attention import (
-    bidirectional_attention, blocked_attention, blocked_attention_quant,
-    decode_attention, decode_attention_seqpar, quantize_kv)
+    bidirectional_attention, blocked_attention, decode_attention,
+    decode_attention_seqpar, prefill_attention, prefill_attention_quant,
+    quantize_kv)
 from repro.models.common import dense_init, rms_norm, split_keys
 from repro.models.mlp import apply_mlp, init_mlp
 from repro.models.moe import apply_moe, init_moe
@@ -149,18 +150,20 @@ def apply_attn_mixer(
         q, k = _rope(cfg, q, k, positions)
         if layer_cache is not None and "ks" in layer_cache:
             layer_cache = _write_kv_quant(layer_cache, k, v, lengths)
-            out = blocked_attention_quant(
+            out = prefill_attention_quant(
                 q, layer_cache["k"], layer_cache["ks"],
                 layer_cache["v"], layer_cache["vs"],
                 q_offset=lengths, lengths=lengths + S,
-                causal=True, window=window, block_size=block_size)
+                window=window, block_size=block_size,
+                backend=cfg.prefill_kernel)
         elif layer_cache is not None:
             ck, cv = _write_kv(layer_cache["k"], layer_cache["v"],
                                k, v, lengths)
             layer_cache = {"k": ck, "v": cv}
-            out = blocked_attention(
+            out = prefill_attention(
                 q, ck, cv, q_offset=lengths, lengths=lengths + S,
-                causal=True, window=window, block_size=block_size)
+                window=window, block_size=block_size,
+                backend=cfg.prefill_kernel)
         else:  # cold prefill without a persistent cache (train-like)
             out = blocked_attention(q, k, v, causal=True, window=window,
                                     block_size=block_size)

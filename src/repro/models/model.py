@@ -84,13 +84,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     for j, spec in enumerate(specs):
         if spec.kind == "attn":
             shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            # k/v (and scale) leaves must be *distinct* buffers: donating
+            # executables (fused decode, batched resume, fused prefix
+            # restore) reject a pytree that donates one buffer twice
             if kv_quant:
-                kv = jnp.zeros(shape, jnp.int8)
-                sc = jnp.zeros(shape[:-1] + (1,), dtype)
-                cache[f"l{j}"] = {"k": kv, "v": kv, "ks": sc, "vs": sc}
+                cache[f"l{j}"] = {"k": jnp.zeros(shape, jnp.int8),
+                                  "v": jnp.zeros(shape, jnp.int8),
+                                  "ks": jnp.zeros(shape[:-1] + (1,), dtype),
+                                  "vs": jnp.zeros(shape[:-1] + (1,), dtype)}
                 continue
-            kv = jnp.zeros(shape, dtype)
-            cache[f"l{j}"] = {"k": kv, "v": kv}
+            cache[f"l{j}"] = {"k": jnp.zeros(shape, dtype),
+                              "v": jnp.zeros(shape, dtype)}
         else:
             st = mamba2.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
             cache[f"l{j}"] = {

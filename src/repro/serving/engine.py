@@ -87,6 +87,10 @@ class EngineConfig:
     megastep_unit: int = 2           # megastep grid granularity (≥2)
     resume_batch_max: int = 4        # M cap for batched resume prefill
     telemetry_sample_steps: int = 32  # decode flush cadence (host sync)
+    # --- cache-aware prefill hot path (DESIGN.md §4) ------------------
+    cold_batch_max: int = 4          # M cap for packed cold prefills
+    autotune_chunks: bool = True     # measure chunk tok/s at slot warmup
+    prefill_tile: int = 128          # kernel KV tile (telemetry estimate)
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -211,6 +215,18 @@ class ServingEngine:
         while m <= min(self.ecfg.resume_batch_max, self.ecfg.num_slots):
             self._resume_levels.append(m)
             m *= 2
+        # cold-pack batch sizes (packed cold prefills, DESIGN.md §4);
+        # m = 1 falls back to the batch-1 slot executable
+        self._cold_levels = []
+        m = 2
+        while m <= min(self.ecfg.cold_batch_max, self.ecfg.num_slots):
+            self._cold_levels.append(m)
+            m *= 2
+        self._warmed_packs: set = set()
+        # chunk autotune table: executable + measured tok/s per warmed
+        # prefill chunk shape (filled by _build_slot at warmup)
+        self._chunk_fns: Dict[int, Callable] = {}
+        self._chunk_tok_s: Dict[int, float] = {}
         self.slots = SlotManager(
             C, g, self._build_slot, preestablish=policy.preestablish)
         self.megasteps: Optional[SlotManager] = None
@@ -239,7 +255,16 @@ class ServingEngine:
         self._window_sessions: List[Session] = []
         self.hotpath_stats = {"fused_steps": 0, "megasteps": 0,
                               "mega_tokens": 0, "resume_batches": 0,
-                              "resume_jobs": 0, "capacity_overruns": 0}
+                              "resume_jobs": 0, "capacity_overruns": 0,
+                              "cold_batches": 0, "cold_jobs": 0,
+                              "prefill_tiles_streamed": 0,
+                              "prefill_tiles_skipped": 0}
+        # prefill-side telemetry accumulated at dispatch time (host
+        # arithmetic only) and folded into hotpath_stats at the sampled
+        # flush cadence
+        self._prefill_pending = {"cold_batches": 0, "cold_jobs": 0,
+                                 "prefill_tiles_streamed": 0,
+                                 "prefill_tiles_skipped": 0}
 
     # ------------------------------------------------------------------
     # executables & warmup
@@ -262,7 +287,47 @@ class ServingEngine:
             _, raw_p, _, _, _ = _raw_fns(self.mcfg, self.ecfg.moe_mode)
             fn = jax.jit(raw_p)          # fresh cache -> real recompile
         self._warm_prefill(fn, chunk)
+        if self.policy.preestablish and self.ecfg.autotune_chunks:
+            # chunk autotune (DESIGN.md §4): measure each warmed chunk
+            # shape's throughput so dispatch can pick the best chunk ≤ a
+            # budget instead of assuming the full budget is optimal.
+            # No-Green skips this: timing inside the serving path would
+            # contaminate the on-demand-construction ablation.
+            self._chunk_fns[chunk] = fn
+            self._chunk_tok_s[chunk] = chunk / self._time_prefill(fn, chunk)
         return {"chunk": chunk, "fn": fn}
+
+    def _time_prefill(self, fn, chunk: int, reps: int = 2) -> float:
+        """Best-of-``reps`` wall time of one warmed chunk call (the new
+        cache output is discarded; pool state is untouched)."""
+        toks = jnp.zeros((1, chunk), jnp.int32)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            lg, _ = fn(self.params, self.pool.cache, toks,
+                       jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1))
+            jax.block_until_ready(lg)
+            best = min(best, time.perf_counter() - t0)
+        return max(best, 1e-9)
+
+    def _tuned_chunk(self, budget: int, bound_fn):
+        """Autotuned (chunk, fn, reps) for a prefill budget.  Picks the
+        measured-fastest warmed chunk ≤ budget, preferring the full
+        budget unless a smaller chunk is >10% faster (timing noise
+        guard); ``reps`` dispatches fill the remaining budget.  Falls
+        back to (budget, bound_fn, 1) — the seed behaviour — when
+        autotune is off or nothing is warmed (No-Green)."""
+        table = self._chunk_tok_s
+        if not self.ecfg.autotune_chunks or not table:
+            return budget, bound_fn, 1
+        cands = [c for c in table if c <= budget]
+        if not cands:
+            return budget, bound_fn, 1
+        full = max(cands)
+        best = max(cands, key=lambda c: table[c])
+        chunk = best if table[best] > 1.10 * table[full] else full
+        reps = max(1, min(budget // chunk, 4))
+        return chunk, self._chunk_fns[chunk], reps
 
     def _build_megastep(self, level: int):
         """Megastep executable fusing ``level`` decode iterations."""
@@ -290,6 +355,9 @@ class ServingEngine:
         jax.block_until_ready(lg)
 
     def _warm_resume(self, m: int, bucket: int) -> None:
+        if (m, bucket) in self._warmed_packs:
+            return      # resume and cold-pack grids share (M, bucket) shapes
+        self._warmed_packs.add((m, bucket))
         lg, _ = self._ex.resume(
             self.params, self._cache_clone(),
             jnp.zeros((m, bucket), jnp.int32),
@@ -309,6 +377,12 @@ class ServingEngine:
         jax.block_until_ready(nt)
         if self.policy.resume_to_decode_queue:
             for m in self._resume_levels:
+                for b in self._buckets:
+                    self._warm_resume(m, b)
+        if self._cold_levels and not self.policy.whole_prefill:
+            # packed cold prefills dispatch the same [M, bucket] batched
+            # executable as resumes; warm any shapes resume didn't
+            for m in self._cold_levels:
                 for b in self._buckets:
                     self._warm_resume(m, b)
         if self.policy.whole_prefill:
@@ -349,6 +423,7 @@ class ServingEngine:
             jnp.asarray(toks[None], jnp.int32),
             jnp.int32(sess.slot), jnp.int32(self.pool.lengths[sess.slot]),
             jnp.int32(take - 1))
+        self._note_prefill_dispatch([self.pool.lengths[sess.slot]], shape_len)
         self.pool.cache = new_cache
         self.pool.lengths[sess.slot] += take
         sess.prefill_done += take
@@ -356,6 +431,24 @@ class ServingEngine:
         self._maybe_register_prefix(sess)
         if sess.remaining_prefill == 0:
             self._finish_prefill(sess, np.asarray(logits))
+
+    def _note_prefill_dispatch(self, cached_lens, shape_len: int,
+                               cold_pack: int = 0) -> None:
+        """Prefill-side hot-path telemetry (host arithmetic only): per
+        dispatched row, the cache-aware kernel streams KV tiles up to
+        the row's post-chunk valid length and skips the rest of the
+        padded ``max_seq`` extent — the estimate mirrors the kernel's
+        causal+length tile bound at ``prefill_tile`` granularity."""
+        bk = self.ecfg.prefill_tile
+        total = -(-self.ecfg.max_seq // bk)
+        streamed = sum(min(-(-(int(l) + shape_len) // bk), total)
+                       for l in cached_lens)
+        p = self._prefill_pending
+        p["prefill_tiles_streamed"] += streamed
+        p["prefill_tiles_skipped"] += len(cached_lens) * total - streamed
+        if cold_pack:
+            p["cold_batches"] += 1
+            p["cold_jobs"] += cold_pack
 
     def _maybe_register_prefix(self, sess: Session) -> None:
         """Prefix registration at the shared-prompt boundary (cold only)."""
@@ -470,7 +563,12 @@ class ServingEngine:
     def _flush_decode(self) -> None:
         """Sampled-cadence host sync: block on the decode stream, record
         the aggregate inter-emission gap (TPOT x steps) and assign token
-        timestamps interpolated across the window."""
+        timestamps interpolated across the window.  Prefill-side
+        counters accumulated since the last flush fold into
+        ``hotpath_stats`` here (the same sampled cadence)."""
+        for k, v in self._prefill_pending.items():
+            self.hotpath_stats[k] += v
+            self._prefill_pending[k] = 0
         n = self._window_steps
         if n == 0:
             return
@@ -551,6 +649,7 @@ class ServingEngine:
         self.pool.cache = new_cache
         self.hotpath_stats["resume_batches"] += 1
         self.hotpath_stats["resume_jobs"] += m
+        self._note_prefill_dispatch(lens, bucket)
 
         np_logits: Optional[np.ndarray] = None
         for i, (job, s) in enumerate(jobs):
@@ -701,13 +800,12 @@ class ServingEngine:
         return self._buckets[-1]
 
     def _prefill_stream_step(self, by_id, slot_exec) -> bool:
-        if not self.queues.q_prefill:
+        qp = self.queues.q_prefill
+        while qp and by_id[qp[0].session_id].state != SessionState.PREFILLING:
+            qp.popleft()                 # drop stale entries at the head
+        if not qp:
             return False
-        job = self.queues.q_prefill[0]
-        s = by_id[job.session_id]
-        if s.state != SessionState.PREFILLING:
-            self.queues.q_prefill.popleft()
-            return False
+        s = by_id[qp[0].session_id]
         if s.remaining_prefill == 0:
             # unreachable with our workloads (shared prefix < full prompt);
             # would require a last-token re-run that is unsafe for SSM state
@@ -717,15 +815,105 @@ class ServingEngine:
             bucket = self._buckets[-1]
             while s.state == SessionState.PREFILLING:
                 self._run_prefill_tokens(s, bucket)
-            self.queues.q_prefill.popleft()
+            qp.popleft()
             return True
         if self.policy.chunk_by_slots:
-            chunk, fn = slot_exec["chunk"], slot_exec["fn"]
+            budget, bound_fn = slot_exec["chunk"], slot_exec["fn"]
         else:
-            chunk, fn = self._fixed_chunk(), None
-        if chunk <= 0:
+            budget, bound_fn = self._fixed_chunk(), None
+        if budget <= 0:
             return False
-        self._run_prefill_tokens(s, chunk, fn=fn)
+        if self._cold_pack_step(by_id, budget):
+            return True
+        chunk, fn, reps = self._tuned_chunk(budget, bound_fn)
+        for _ in range(reps):
+            if s.state != SessionState.PREFILLING:
+                break
+            self._run_prefill_tokens(s, chunk, fn=fn)
         if s.state != SessionState.PREFILLING:
-            self.queues.q_prefill.popleft()
+            qp.popleft()
         return True
+
+    def _cold_pack_step(self, by_id, budget: int) -> bool:
+        """Pack the first M pending prefills from Q_P into one
+        [M, bucket] batched executable (the same machinery — and warmed
+        shapes — as batched resume), with bucket·M ≤ the cycle's prefill
+        budget so decode protection is unchanged.  Leftover and
+        unfinished jobs return to the queue head in order."""
+        qp = self.queues.q_prefill
+        if not self._cold_levels:
+            return False
+        jobs: List[Tuple[Job, Session]] = []
+        while qp and len(jobs) < self._cold_levels[-1]:
+            job = qp.popleft()
+            s = by_id[job.session_id]
+            if s.state != SessionState.PREFILLING:
+                continue                 # stale entry: drop, as the head does
+            if s.remaining_prefill == 0:
+                # same loud invariant as the head-of-queue path: silently
+                # dropping the job would leak the slot and hang the session
+                raise RuntimeError("fully-cached request needs >=1 new token")
+            jobs.append((job, s))
+        m = bucket = None
+        if len(jobs) >= 2:
+            for lv in reversed(self._cold_levels):    # largest M first
+                if lv <= len(jobs):
+                    b = self._bucket_down(budget // lv)
+                    if b is not None:
+                        # don't dispatch a bigger shape than the packed
+                        # jobs can fill (same cap as _resume_batch_step)
+                        need = max(self._aligned_remaining(s)
+                                   for _, s in jobs[:lv])
+                        m, bucket = lv, min(b, self._bucket_for(need))
+                        break
+        if m is None:
+            for job, _ in reversed(jobs):
+                qp.appendleft(job)       # no viable pack: restore order
+            return False
+        for job, _ in reversed(jobs[m:]):
+            qp.appendleft(job)           # untouched leftovers keep order
+        jobs = jobs[:m]
+
+        takes = []
+        toks = np.zeros((m, bucket), np.int32)
+        for i, (_, s) in enumerate(jobs):
+            take = min(bucket, self._aligned_remaining(s))
+            takes.append(take)
+            toks[i, :take] = s.current_turn.prefill_tokens[
+                s.prefill_done: s.prefill_done + take]
+            if self.pool.lengths[s.slot] + take > self.ecfg.max_seq - 1:
+                self.hotpath_stats["capacity_overruns"] += 1
+        slots = np.asarray([s.slot for _, s in jobs], np.int32)
+        lens = np.asarray([self.pool.lengths[s.slot] for _, s in jobs],
+                          np.int32)
+        logit_idx = np.asarray([t - 1 for t in takes], np.int32)
+
+        logits, new_cache = self._ex.resume(
+            self.params, self.pool.cache, jnp.asarray(toks),
+            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx))
+        self.pool.cache = new_cache
+        self._note_prefill_dispatch(lens, bucket, cold_pack=m)
+
+        np_logits: Optional[np.ndarray] = None
+        for i, (job, s) in enumerate(jobs):
+            self.pool.lengths[s.slot] += takes[i]
+            s.prefill_done += takes[i]
+            s.cached_len = int(self.pool.lengths[s.slot])
+            self._maybe_register_prefix(s)
+            if s.remaining_prefill == 0:
+                if np_logits is None:
+                    np_logits = np.asarray(logits)
+                self._finish_prefill(s, np_logits[i])
+        for job, s in reversed(jobs):
+            if s.state == SessionState.PREFILLING:
+                qp.appendleft(job)       # continue next cycle, in order
+        return True
+
+    def _bucket_down(self, n: int) -> Optional[int]:
+        """Largest warmed token bucket ≤ n, or None when n is below the
+        smallest bucket."""
+        best = None
+        for b in self._buckets:
+            if b <= n:
+                best = b
+        return best

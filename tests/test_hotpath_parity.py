@@ -1,12 +1,17 @@
-"""Device-resident hot-path parity (DESIGN.md §3).
+"""Device-resident hot-path parity (DESIGN.md §3) and the cache-aware
+prefill path (DESIGN.md §4).
 
 The fused decode step, the K-step megastep and the batched resume
 prefill must be *semantically invisible*: identical token streams and
 cache state to the seed per-step path (host argmax + where-select
 commit + serial batch-1 resume), for both attention and Mamba/hybrid
-stacks.  Plus interpret-mode parity for the block-skipping decode
-kernel against the naive oracle.
+stacks.  Plus interpret-mode parity for the block-skipping decode and
+length-pruned prefill kernels against their pure-JAX references, and an
+engine e2e check that the Pallas prefill path is token-stream-identical
+to the XLA reference path.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,6 +23,8 @@ from repro.models import (POSITIONAL_CACHE_KEYS, forward_decode,
                           forward_decode_fused, forward_decode_megastep,
                           forward_prefill, forward_resume_batch, init_cache,
                           init_params)
+from repro.models.attention import (blocked_attention,
+                                    blocked_attention_quant, quantize_kv)
 from repro.serving.kvcache import KVCachePool
 
 HYBRID = ModelConfig(name="tiny-hybrid-hp", family="hybrid", num_layers=2,
@@ -197,6 +204,99 @@ def test_decode_kernel_block_skip_parity():
         exp = ref.naive_decode_attention(q, kc, vc, lengths)
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware prefill kernel (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+PREFILL_CASES = {
+    # (H, Hk, Sq, window, q_offset, lengths) against a 256-row cache:
+    # lengths = q_offset + Sq (the serving invariant: the chunk itself
+    # is counted), exercising causal pruning, GQA head groups, sliding
+    # windows and short-lengths (mostly-empty cache) tile skipping.
+    "causal": (4, 4, 32, 0, [0, 16, 96], [32, 48, 128]),
+    "gqa": (8, 2, 40, 0, [0, 100, 200], [40, 140, 240]),
+    "window": (4, 2, 32, 48, [0, 64, 180], [32, 96, 212]),
+    "short_lengths": (4, 2, 16, 0, [0, 0, 8], [16, 16, 24]),
+    "unaligned": (4, 2, 23, 0, [5, 77, 131], [28, 100, 154]),
+}
+
+
+def _prefill_case(name):
+    H, Hk, Sq, window, qoff, lens = PREFILL_CASES[name]
+    S, hd = 256, 32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(sum(map(ord, name))), 3)
+    q = jax.random.normal(k1, (3, Sq, H, hd))
+    kc = jax.random.normal(k2, (3, S, Hk, hd))
+    vc = jax.random.normal(k3, (3, S, Hk, hd))
+    return (q, kc, vc, jnp.asarray(qoff, jnp.int32),
+            jnp.asarray(lens, jnp.int32), window)
+
+
+@pytest.mark.parametrize("case", list(PREFILL_CASES))
+def test_prefill_kernel_parity(case):
+    """interpret=True parity of the length-pruned Pallas prefill kernel
+    vs the pure-JAX blocked_attention reference (acceptance bound:
+    max abs diff < 1e-4)."""
+    q, kc, vc, qoff, lens, window = _prefill_case(case)
+    out = ops.flash_prefill(q, kc, vc, qoff, lens, window=window,
+                            block_q=32, block_k=32, interpret=True)
+    exp = blocked_attention(q, kc, vc, q_offset=qoff, lengths=lens,
+                            causal=True, window=window, block_size=64)
+    assert float(jnp.max(jnp.abs(out - exp))) < 1e-4
+    # and vs the naive oracle, so reference bugs can't cancel out
+    oracle = ref.naive_attention(q, kc, vc, causal=True, window=window,
+                                 q_offset=qoff, lengths=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("case", ["causal", "gqa", "window"])
+def test_prefill_kernel_quant_parity(case):
+    """int8-KV variant: per-tile VMEM dequantisation must match the
+    pure-JAX quantised scan under the same pruning."""
+    q, kc, vc, qoff, lens, window = _prefill_case(case)
+    kq, ks = quantize_kv(kc)
+    vq, vs = quantize_kv(vc)
+    out = ops.flash_prefill_quant(q, kq, ks, vq, vs, qoff, lens,
+                                  window=window, block_q=32, block_k=32,
+                                  interpret=True)
+    exp = blocked_attention_quant(q, kq, ks, vq, vs, q_offset=qoff,
+                                  lengths=lens, causal=True, window=window,
+                                  block_size=64)
+    assert float(jnp.max(jnp.abs(out - exp))) < 1e-4
+
+
+def test_engine_prefill_backend_token_parity(tiny_cfg):
+    """Engine e2e: identical per-session token outcomes with the Pallas
+    prefill path enabled vs disabled (the ModelConfig switch must be
+    semantically invisible), and the prefill-side telemetry counts
+    tiles on both paths."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.policies import POLICIES
+    from repro.serving.request import SessionState
+    from repro.serving.workload import make_workload
+
+    params = _params_for(tiny_cfg)
+    ecfg = EngineConfig(num_slots=4, max_seq=256, cycle_budget=48,
+                        granularity=8, b_min=8, b_max=64, b_init=16,
+                        delta_b=8, control_interval_s=0.05, max_wall_s=120.0)
+    outcomes = {}
+    for backend in ("xla", "pallas"):
+        cfg = dataclasses.replace(tiny_cfg, name=f"{tiny_cfg.name}-{backend}",
+                                  prefill_kernel=backend)
+        sessions = make_workload(2, workload="react",
+                                 vocab_size=cfg.vocab_size, token_scale=0.04,
+                                 num_system_prompts=1, seed=7, stagger_s=0.05)
+        eng = ServingEngine(cfg, params, POLICIES["agentserve"], ecfg)
+        eng.run(sessions)
+        assert all(s.state == SessionState.FINISHED for s in sessions)
+        assert (eng.hotpath_stats["prefill_tiles_streamed"] > 0
+                and eng.hotpath_stats["prefill_tiles_skipped"] > 0)
+        outcomes[backend] = [(s.last_token, s.output_tokens(), s.cached_len)
+                             for s in sessions]
+    assert outcomes["xla"] == outcomes["pallas"]
 
 
 def test_alloc_resets_stale_ssm_state():

@@ -78,6 +78,32 @@ def test_prefix_eviction_is_lru():
     assert pool.stats["evictions"] == 1
 
 
+def test_register_prefix_refresh_on_exact_key_hit():
+    """Re-registering an already-cached prefix must not re-snapshot or
+    evict another entry at capacity — it only refreshes recency (so the
+    re-registered prefix is treated as just-used by LRU eviction)."""
+    pool = KVCachePool(TINY, 4, 64, max_prefix_entries=2)
+    slot = pool.alloc()
+    a = np.arange(5, dtype=np.int32)
+    b = np.arange(6, dtype=np.int32)
+    c = np.arange(7, dtype=np.int32)
+
+    def reg(tokens):
+        pool.lengths[slot] = len(tokens)
+        pool.register_prefix(slot, tokens)
+
+    reg(a)
+    reg(b)                                  # at capacity, no eviction yet
+    reg(a)                                  # exact-key hit: refresh only
+    assert pool.stats["prefix_refreshes"] == 1
+    assert pool.stats["evictions"] == 0     # the old code evicted here
+    reg(c)                                  # LRU is now b, not a
+    assert pool.lookup(a) is not None
+    assert pool.lookup(c) is not None
+    assert pool.lookup(b) is None
+    assert pool.stats["evictions"] == 1
+
+
 @given(mask=st.lists(st.booleans(), min_size=4, max_size=4))
 @settings(max_examples=20, deadline=None)
 def test_commit_mask_protects_inactive(mask):
