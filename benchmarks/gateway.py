@@ -1,0 +1,141 @@
+"""Open-loop gateway benchmark: goodput vs offered arrival rate.
+
+    PYTHONPATH=src python benchmarks/gateway.py [--rates 2,4] [--smoke]
+
+Boots the online gateway (DESIGN.md §6) on the quickstart config and
+drives it with a seeded open-loop Poisson cohort at each offered rate:
+one asyncio client task per agent, submitting at the arrival-process
+offsets and consuming the token stream to completion.  Emits
+``BENCH_gateway.json`` with one goodput-vs-offered-rate row per rate
+(goodput, throughput, TTFT/TPOT percentiles, queue-delay breakdown,
+429 shed counts) — the open-loop counterpart of the Fig-5 closed-loop
+sweep, and the regime where HOL blocking actually manifests.
+
+``--smoke`` is the CI gateway job: ~8 concurrent agents at 2 fixed
+rates for a bounded wall clock, asserting every admitted session
+completes and an SLO report is emitted.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.gateway import (AgentGateway, GatewayConfig,
+                                   drive_open_loop)
+from repro.serving.metrics import (OpenLoopReport, SLOThresholds,
+                                   build_open_loop_report)
+from repro.serving.policies import POLICIES
+from repro.serving.request import SessionState
+from repro.serving.workload import make_open_loop_workload
+
+
+def run_rate(cfg, params, args, rate: float) -> dict:
+    """One offered-rate point: fresh engine + gateway, seeded cohort."""
+    ecfg = EngineConfig(num_slots=args.slots, max_seq=512,
+                        cycle_budget=160, granularity=16,
+                        control_interval_s=0.1,
+                        max_wall_s=float("inf"))
+    engine = ServingEngine(cfg, params, POLICIES[args.policy], ecfg)
+    gateway = AgentGateway(engine, GatewayConfig(
+        high_watermark=args.high_watermark, tool_policy=args.tool_policy))
+    sessions = make_open_loop_workload(
+        args.agents, workload=args.workload, vocab_size=cfg.vocab_size,
+        token_scale=args.token_scale, num_system_prompts=1,
+        seed=args.seed, rate_rps=rate)
+    arrivals = [s.ready_s for s in sessions]
+
+    async def go():
+        await gateway.start()
+        run = await drive_open_loop(gateway, sessions, arrivals)
+        await gateway.stop(timeout_s=args.max_wall)
+        return run
+
+    run = asyncio.run(go())
+    thr = SLOThresholds(ttft_s=args.slo_ttft_s, tpot_s=args.slo_tpot_s)
+    rep = build_open_loop_report(args.policy, run.completed, run.wall_s,
+                                 rate, rejected=len(run.rejected),
+                                 thresholds=thr)
+    assert all(s.state == SessionState.FINISHED for s in run.completed), \
+        "admitted sessions must complete"
+    return {
+        "report": dataclasses.asdict(rep),
+        "row": rep.row(),
+        "interleaved": run.interleaved(),
+        "events": len(run.events),
+        "gateway": gateway.stats(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="2,4",
+                    help="comma-separated offered rates (req/s)")
+    ap.add_argument("--agents", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--policy", default="agentserve",
+                    choices=sorted(POLICIES))
+    ap.add_argument("--workload", default="react",
+                    choices=["react", "plan_execute"])
+    ap.add_argument("--token-scale", type=float, default=0.0625)
+    ap.add_argument("--high-watermark", type=int, default=16)
+    ap.add_argument("--tool-policy", default="hold",
+                    choices=["hold", "release"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-ttft-s", type=float, default=5.0)
+    ap.add_argument("--slo-tpot-s", type=float, default=1.0)
+    ap.add_argument("--max-wall", type=float, default=120.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gateway smoke: 8 agents, 2 rates, bounded "
+                         "wall clock, asserts completion + SLO report")
+    ap.add_argument("--out", default="BENCH_gateway.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.agents, args.token_scale = 8, 0.04
+        args.rates = "2,6"
+
+    cfg = get_smoke_config("smollm-360m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rates = [float(r) for r in args.rates.split(",")]
+
+    print(f"model={cfg.name} backend={jax.default_backend()} "
+          f"agents={args.agents} rates={rates}")
+    print(OpenLoopReport.HEADER)
+    results = []
+    for rate in rates:
+        res = run_rate(cfg, params, args, rate)
+        results.append(res)
+        print(res["row"], flush=True)
+
+    report = {
+        "model": cfg.name,
+        "backend": jax.default_backend(),
+        "agents": args.agents,
+        "slots": args.slots,
+        "workload": args.workload,
+        "token_scale": args.token_scale,
+        "high_watermark": args.high_watermark,
+        "rates": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        assert all(r["report"]["completed"] > 0 for r in results)
+        assert all(np.isfinite(r["report"]["slo_attainment"])
+                   for r in results), "SLO report must be emitted"
+        assert any(r["interleaved"] for r in results), \
+            "concurrent streams must interleave"
+
+
+if __name__ == "__main__":
+    main()

@@ -55,3 +55,49 @@ class AdmissionQueues:
 
     def occupancy(self):
         return len(self.q_decode), len(self.q_prefill)
+
+    def total_occupancy(self) -> int:
+        return len(self.q_decode) + len(self.q_prefill)
+
+
+@dataclasses.dataclass
+class WatermarkGate:
+    """Hysteretic admission gate for the online gateway (DESIGN.md §6).
+
+    Open-loop arrivals are unbounded, so the gateway sheds load instead
+    of queueing forever: when occupancy (queued jobs + sessions waiting
+    for a KV slot) reaches ``high`` the gate closes and submissions are
+    rejected (surfaced as 429-style results); it reopens only once
+    occupancy drains to ``low``.  The high/low hysteresis prevents
+    reject/accept flapping right at the boundary."""
+    high: int
+    low: int = -1                    # default: high // 2
+    shedding: bool = False
+    admitted: int = 0
+    rejected: int = 0
+
+    def __post_init__(self):
+        if self.low < 0:
+            self.low = self.high // 2
+        if self.low >= self.high:
+            raise ValueError(f"low watermark {self.low} must be below "
+                             f"high {self.high}")
+
+    def check(self, occupancy: int) -> bool:
+        """Update the shedding state for the observed occupancy and
+        return whether a request would be admitted (no counting)."""
+        if occupancy >= self.high:
+            self.shedding = True
+        elif occupancy <= self.low:
+            self.shedding = False
+        return not self.shedding
+
+    def offer(self, occupancy: int) -> bool:
+        """check() plus admitted/rejected accounting — call once per
+        actual submission decision."""
+        ok = self.check(occupancy)
+        if ok:
+            self.admitted += 1
+        else:
+            self.rejected += 1
+        return ok

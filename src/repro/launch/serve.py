@@ -1,21 +1,332 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Boots an AgentServe engine for the reduced variant of the selected
-architecture and serves a multi-agent ToolBench-like workload, printing
-the per-policy report (the paper's Fig-5-style output)."""
+Two modes:
+
+  * closed-loop (default): boots an AgentServe engine for the reduced
+    variant of the selected architecture and serves a multi-agent
+    ToolBench-like workload, printing the per-policy report (the
+    paper's Fig-5-style output);
+  * online (``--serve``): boots the asyncio gateway (DESIGN.md §6) and
+    exposes a minimal stdlib HTTP/SSE front —
+
+        GET  /healthz      liveness
+        GET  /stats        gateway counters + occupancy
+        POST /v1/session   submit an agent session; streams one
+                           ``data: {...}`` SSE line per token, a final
+                           ``event: done`` record, or HTTP 429 when the
+                           admission watermark sheds the request.
+
+    ``--serve-smoke`` boots the same server on an ephemeral port,
+    drives it with an in-process asyncio client at an open-loop Poisson
+    rate, prints the open-loop report row, and exits — the CI gateway
+    smoke path.
+"""
 from __future__ import annotations
 
 import argparse
+import asyncio
+import dataclasses
+import json
 import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
 
 import jax
 
 from repro.configs.base import get_smoke_config
 from repro.models import init_params
 from repro.serving.engine import EngineConfig, ServingEngine
-from repro.serving.metrics import ServingReport, SLOThresholds
+from repro.serving.gateway import AgentGateway, GatewayConfig, Rejected
+from repro.serving.metrics import (OpenLoopReport, ServingReport,
+                                   SLOThresholds, build_open_loop_report)
 from repro.serving.policies import POLICIES
-from repro.serving.workload import make_workload
+from repro.serving.workload import (SPECS, make_session, make_workload,
+                                    poisson_arrivals)
+
+
+# ---------------------------------------------------------------------------
+# HTTP/SSE front (stdlib asyncio only — no extra deps)
+# ---------------------------------------------------------------------------
+
+def _http_resp(status: int, body: bytes, ctype: str = "application/json",
+               ) -> bytes:
+    reason = {200: "OK", 404: "Not Found", 429: "Too Many Requests",
+              400: "Bad Request"}.get(status, "OK")
+    return (f"HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n"
+            f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+            ).encode() + body
+
+
+def _json_resp(status: int, obj) -> bytes:
+    return _http_resp(status, json.dumps(obj).encode())
+
+
+def _session_from_spec(spec: Dict, mcfg, default_token_scale: float):
+    """Build a scripted agent session from a client JSON spec:
+    ``{"workload": "react", "seed": 7, "token_scale": 0.1}``.  The
+    session_id is assigned by the gateway at admission."""
+    workload = spec.get("workload", "react")
+    if workload not in SPECS:
+        raise ValueError(f"unknown workload {workload!r}")
+    seed = int(spec.get("seed", 0))
+    scale = float(spec.get("token_scale", default_token_scale))
+    rng = np.random.default_rng(seed)
+    return make_session(-1, SPECS[workload], rng, mcfg.vocab_size,
+                        token_scale=scale)
+
+
+async def _read_request(reader) -> Tuple[str, str, Dict[str, str], bytes]:
+    line = await reader.readline()
+    if not line:
+        raise ConnectionError("empty request")
+    parts = line.decode("latin1").split()
+    if len(parts) < 2:
+        raise ValueError(f"bad request line {line!r}")
+    method, path = parts[0], parts[1]
+    headers: Dict[str, str] = {}
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin1").partition(":")
+        headers[k.strip().lower()] = v.strip()
+    body = b""
+    n = int(headers.get("content-length", "0") or 0)
+    if n:
+        body = await reader.readexactly(n)
+    return method, path, headers, body
+
+
+async def handle_connection(gateway: AgentGateway, mcfg,
+                            default_token_scale: float,
+                            reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+    try:
+        try:
+            method, path, _, body = await _read_request(reader)
+        except (ValueError, ConnectionError, asyncio.IncompleteReadError):
+            return
+        if method == "GET" and path == "/healthz":
+            writer.write(_json_resp(200, {"ok": True}))
+        elif method == "GET" and path == "/stats":
+            writer.write(_json_resp(200, gateway.stats()))
+        elif method == "POST" and path == "/v1/session":
+            try:
+                spec = json.loads(body or b"{}")
+                if not isinstance(spec, dict):
+                    raise ValueError("request body must be a JSON object")
+                sess = _session_from_spec(spec, mcfg, default_token_scale)
+            except (ValueError, KeyError, TypeError) as e:
+                writer.write(_json_resp(400, {"error": str(e)}))
+                await writer.drain()
+                return
+            res = await gateway.submit(sess)
+            if isinstance(res, Rejected):
+                writer.write(_json_resp(429, {
+                    "error": res.reason, "occupancy": res.occupancy}))
+                await writer.drain()
+                return
+            writer.write(b"HTTP/1.1 200 OK\r\n"
+                         b"Content-Type: text/event-stream\r\n"
+                         b"Cache-Control: no-cache\r\n"
+                         b"Connection: close\r\n\r\n")
+            await writer.drain()
+            async for ev in res.events():
+                writer.write(b"data: "
+                             + json.dumps(dataclasses.asdict(ev)).encode()
+                             + b"\n\n")
+                await writer.drain()
+            writer.write(b"event: done\ndata: "
+                         + json.dumps({
+                             "session_id": res.session_id,
+                             "tokens": len(res.received)}).encode()
+                         + b"\n\n")
+        else:
+            writer.write(_json_resp(404, {"error": f"no route {path}"}))
+        await writer.drain()
+    except (ConnectionResetError, BrokenPipeError):
+        pass                             # client went away mid-stream
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# asyncio SSE client (smoke driver + tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+async def sse_submit(host: str, port: int, spec: Dict,
+                     ) -> Tuple[int, List[Dict]]:
+    """POST one session spec and consume its SSE stream.  Returns
+    (http_status, token event dicts)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(spec).encode()
+    writer.write((f"POST /v1/session HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    status_line = await reader.readline()
+    status = int(status_line.split()[1])
+    while (await reader.readline()) not in (b"\r\n", b"\n", b""):
+        pass                             # skip response headers
+    events: List[Dict] = []
+    if status == 200:
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            line = line.strip()
+            if line == b"event: done":
+                await reader.readline()  # the done data record
+                break
+            if line.startswith(b"data: "):
+                events.append(json.loads(line[len(b"data: "):]))
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    return status, events
+
+
+async def sse_get(host: str, port: int, path: str) -> Tuple[int, Dict]:
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    n = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        if h.lower().startswith(b"content-length:"):
+            n = int(h.split(b":")[1])
+    body = json.loads(await reader.readexactly(n)) if n else {}
+    writer.close()
+    await writer.wait_closed()
+    return status, body
+
+
+# ---------------------------------------------------------------------------
+# gateway boot
+# ---------------------------------------------------------------------------
+
+def _build_engine(args, *, max_wall_s: float = 300.0,
+                  ) -> Tuple[ServingEngine, object]:
+    """One engine construction for both the closed-loop and online
+    paths — they must not silently diverge in shapes/budget."""
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(num_slots=max(args.agents + 2, 6), max_seq=1024,
+                        cycle_budget=160, granularity=16,
+                        control_interval_s=0.1, max_wall_s=max_wall_s)
+    return ServingEngine(cfg, params, POLICIES[args.policy], ecfg), cfg
+
+
+def build_gateway(args) -> Tuple[AgentGateway, object]:
+    engine, cfg = _build_engine(args, max_wall_s=float("inf"))
+    gcfg = GatewayConfig(high_watermark=args.high_watermark,
+                         admission=args.admission,
+                         tool_policy=args.tool_policy)
+    return AgentGateway(engine, gcfg), cfg
+
+
+async def _serve(args) -> int:
+    gateway, mcfg = build_gateway(args)
+    await gateway.start()
+    server = await asyncio.start_server(
+        lambda r, w: handle_connection(gateway, mcfg, args.token_scale,
+                                       r, w),
+        args.host, args.port)
+    port = server.sockets[0].getsockname()[1]
+    print(f"gateway serving on http://{args.host}:{port} "
+          f"(policy={args.policy}, watermark={args.high_watermark})",
+          flush=True)
+    try:
+        async with server:
+            await server.serve_forever()
+    except asyncio.CancelledError:
+        pass
+    finally:
+        await gateway.stop(timeout_s=5.0)
+    return 0
+
+
+async def _serve_smoke(args) -> int:
+    """Boot the SSE server on an ephemeral port, drive it with an
+    asyncio client cohort at an open-loop Poisson rate, and print the
+    open-loop report — end-to-end over real sockets."""
+    gateway, mcfg = build_gateway(args)
+    await gateway.start()
+    server = await asyncio.start_server(
+        lambda r, w: handle_connection(gateway, mcfg, args.token_scale,
+                                       r, w),
+        args.host, 0)
+    port = server.sockets[0].getsockname()[1]
+    print(f"smoke server on {args.host}:{port}", flush=True)
+
+    arrivals = poisson_arrivals(args.rate, args.agents, seed=args.seed)
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    statuses: List[int] = []
+    all_events: List[Tuple[float, Dict]] = []
+
+    async def one(i: int, at: float) -> None:
+        delay = at - (loop.time() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        status, events = await sse_submit(
+            args.host, port, {"workload": args.workload, "seed": args.seed + i,
+                              "token_scale": args.token_scale})
+        statuses.append(status)
+        all_events.extend((loop.time() - t0, e) for e in events)
+
+    await asyncio.gather(*(one(i, a) for i, a in enumerate(arrivals)))
+    wall = loop.time() - t0
+    await gateway.stop(timeout_s=30.0)
+    server.close()
+    await server.wait_closed()
+
+    ok = statuses.count(200)
+    shed = statuses.count(429)
+    sids = {e["session_id"] for _, e in all_events}
+    print(f"agents={args.agents} rate={args.rate}/s wall={wall:.2f}s "
+          f"streams_ok={ok} shed_429={shed} "
+          f"tokens={len(all_events)} sessions_streamed={len(sids)}",
+          flush=True)
+    done = list(gateway.completed_sessions)
+    rep = build_open_loop_report(
+        args.policy, done, wall, args.rate, rejected=shed,
+        thresholds=SLOThresholds(ttft_s=10.0, tpot_s=2.0))
+    print(OpenLoopReport.HEADER)
+    print(rep.row(), flush=True)
+    assert ok + shed == args.agents, "every request must resolve"
+    assert ok > 0 and len(all_events) > 0, "no tokens streamed"
+    assert len(done) == ok, "every admitted session must finish"
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# closed-loop mode (unchanged Fig-5 path)
+# ---------------------------------------------------------------------------
+
+def _closed_loop(args) -> int:
+    policies = sorted(POLICIES) if args.compare else [args.policy]
+    print(ServingReport.HEADER)
+    for policy in policies:
+        eng, cfg = _build_engine(
+            argparse.Namespace(**{**vars(args), "policy": policy}))
+        sessions = make_workload(
+            args.agents, workload=args.workload,
+            vocab_size=cfg.vocab_size, token_scale=args.token_scale,
+            num_system_prompts=1, seed=args.seed)
+        rep = eng.run(sessions)
+        print(rep.row(), flush=True)
+    return 0
 
 
 def main(argv=None) -> int:
@@ -30,24 +341,28 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare", action="store_true",
                     help="run every policy on the same workload")
+    # online gateway mode
+    ap.add_argument("--serve", action="store_true",
+                    help="boot the online HTTP/SSE gateway")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="boot the gateway and drive it with an in-process "
+                         "open-loop client cohort, then exit")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8077)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--high-watermark", type=int, default=8)
+    ap.add_argument("--admission", default="reject",
+                    choices=["reject", "queue"])
+    ap.add_argument("--tool-policy", default="hold",
+                    choices=["hold", "release"])
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    ecfg = EngineConfig(num_slots=max(args.agents + 2, 6), max_seq=1024,
-                        cycle_budget=160, granularity=16,
-                        control_interval_s=0.1)
-    policies = sorted(POLICIES) if args.compare else [args.policy]
-    print(ServingReport.HEADER)
-    for policy in policies:
-        sessions = make_workload(
-            args.agents, workload=args.workload,
-            vocab_size=cfg.vocab_size, token_scale=args.token_scale,
-            num_system_prompts=1, seed=args.seed)
-        eng = ServingEngine(cfg, params, POLICIES[policy], ecfg)
-        rep = eng.run(sessions)
-        print(rep.row(), flush=True)
-    return 0
+    if args.serve_smoke:
+        return asyncio.run(_serve_smoke(args))
+    if args.serve:
+        return asyncio.run(_serve(args))
+    return _closed_loop(args)
 
 
 if __name__ == "__main__":

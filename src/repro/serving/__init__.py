@@ -1,5 +1,11 @@
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.gateway import (AgentGateway, GatewayConfig,  # noqa: F401
+                                   LiveSession, Rejected, drive_open_loop)
 from repro.serving.kvcache import KVCachePool  # noqa: F401
-from repro.serving.metrics import ServingReport, SLOThresholds  # noqa: F401
+from repro.serving.metrics import (OpenLoopReport, ServingReport,  # noqa: F401
+                                   SLOThresholds, build_open_loop_report)
 from repro.serving.policies import POLICIES, PolicySpec  # noqa: F401
-from repro.serving.workload import make_workload  # noqa: F401
+from repro.serving.reactor import (EngineReactor, HandleStatus,  # noqa: F401
+                                   RequestHandle, TokenEvent)
+from repro.serving.workload import (make_open_loop_workload,  # noqa: F401
+                                    make_workload, poisson_arrivals)

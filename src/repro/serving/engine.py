@@ -42,6 +42,14 @@ chunks + power-of-two resume buckets + megastep levels + resume batch
 sizes); shorter real work is padded to the executable's shape and
 masked — shape-stable dispatch is precisely the Green-Context-analogue
 discipline.
+
+Reactor surface (DESIGN.md §6): the engine is *steppable* — ``attach``
+registers a session, ``step()`` runs exactly one cycle and returns the
+``TokenEvent``s it emitted, and the closed-loop ``run()`` is
+reimplemented as attach-all + step-until-done.  Online drivers
+(``serving/reactor.py``, ``serving/gateway.py``) use the same ``step``
+plus ``resume_session``/``park_session`` for gateway-clocked tool
+waits.
 """
 from __future__ import annotations
 
@@ -65,6 +73,7 @@ from repro.models import (forward_decode, forward_decode_fused,
 from repro.serving.kvcache import KVCachePool
 from repro.serving.metrics import ServingReport, SLOThresholds, build_report
 from repro.serving.policies import PolicySpec
+from repro.serving.reactor import TokenEvent
 from repro.serving.request import Session, SessionState
 
 
@@ -91,6 +100,12 @@ class EngineConfig:
     cold_batch_max: int = 4          # M cap for packed cold prefills
     autotune_chunks: bool = True     # measure chunk tok/s at slot warmup
     prefill_tile: int = 128          # kernel KV tile (telemetry estimate)
+    # --- online reactor (DESIGN.md §6) --------------------------------
+    trace_max: int = 200_000         # per-cycle telemetry cap (long-run
+    #                                  gateway processes must not grow
+    #                                  the trace without bound)
+    record_events: bool = False      # run(): keep TokenEvents in
+    #                                  engine.event_log (regression tests)
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -241,6 +256,15 @@ class ServingEngine:
         # run-state
         self._t0 = time.perf_counter()
         self.trace: List[Dict] = []       # per-cycle telemetry (Fig 2)
+        # reactor state (DESIGN.md §6): the registry of live sessions,
+        # the control-clock deadline, and the per-cycle token events
+        # drained by step().  run() and the online gateway share these.
+        self._sessions: Dict[int, Session] = {}
+        self._events: List[TokenEvent] = []
+        self._next_ctrl = self.ecfg.control_interval_s
+        self._parked: Dict[int, object] = {}   # sid -> parked KV snapshot
+        self.last_step_did_work = False
+        self.event_log: List[TokenEvent] = []  # run(), record_events only
         # device-resident decode state (rebuilt from host mirrors only on
         # membership changes; see DESIGN.md §3)
         B = self.ecfg.num_slots
@@ -253,12 +277,18 @@ class ServingEngine:
         self._window_t0: Optional[float] = None
         self._window_steps = 0
         self._window_sessions: List[Session] = []
+        # per-step token arrays accumulated within the window so the
+        # flush can emit true per-token TokenEvents (megasteps hand back
+        # their [K, B] token sequence; holding the device arrays costs
+        # nothing — they are outputs the executables produce anyway)
+        self._window_toks: List[jax.Array] = []
         self.hotpath_stats = {"fused_steps": 0, "megasteps": 0,
                               "mega_tokens": 0, "resume_batches": 0,
                               "resume_jobs": 0, "capacity_overruns": 0,
                               "cold_batches": 0, "cold_jobs": 0,
                               "prefill_tiles_streamed": 0,
-                              "prefill_tiles_skipped": 0}
+                              "prefill_tiles_skipped": 0,
+                              "parks": 0, "unparks": 0}
         # prefill-side telemetry accumulated at dispatch time (host
         # arithmetic only) and folded into hotpath_stats at the sampled
         # flush cadence
@@ -476,7 +506,20 @@ class ServingEngine:
         sess.first_token_s.append(now)
         sess.token_times_s.append(now)
         sess.decoded = 1
+        self._emit(sess, sess.last_token, now, index=0, first=True,
+                   turn_end=sess.decoded >= sess.current_turn.decode_len)
         self._after_token(sess, now)
+
+    def _emit(self, sess: Session, token, t: float, index: int,
+              first: bool = False, turn_end: bool = False) -> None:
+        """Record one emitted token as a reactor event (drained by
+        ``step()``).  Must run *before* ``_after_token`` advances
+        ``turn_idx`` so the event names the turn that produced it."""
+        self._events.append(TokenEvent(
+            session_id=sess.session_id, token=int(token), t=t,
+            turn_idx=sess.turn_idx, index=index, first=first,
+            turn_end=turn_end,
+            session_end=turn_end and sess.turn_idx + 1 >= len(sess.turns)))
 
     # ------------------------------------------------------------------
     # decode stream (device-resident)
@@ -537,15 +580,17 @@ class ServingEngine:
         if self._window_t0 is None:
             self._window_t0 = self._clock()
         if exe is not None:
-            _, nt, nc, nl = exe(self.params, self.pool.cache,
-                                self._dev_tokens, self._dev_lengths,
-                                self._dev_mask)
+            step_toks, nt, nc, nl = exe(self.params, self.pool.cache,
+                                        self._dev_tokens, self._dev_lengths,
+                                        self._dev_mask)
+            self._window_toks.append(step_toks)      # [K, B] per-step ids
             self.hotpath_stats["megasteps"] += 1
             self.hotpath_stats["mega_tokens"] += K * len(active)
         else:
             nt, nc, nl = self._ex.fused(self.params, self.pool.cache,
                                         self._dev_tokens, self._dev_lengths,
                                         self._dev_mask)
+            self._window_toks.append(nt)             # [B] one-step ids
             self.hotpath_stats["fused_steps"] += 1
         self._dev_tokens, self._dev_lengths = nt, nl
         self.pool.cache = nc
@@ -581,13 +626,26 @@ class ServingEngine:
         else:
             ts = [now] * n
         toks = np.asarray(self._dev_tokens)
+        B = self.ecfg.num_slots
+        step_toks = np.concatenate(
+            [np.asarray(a).reshape(-1, B) for a in self._window_toks],
+            axis=0) if self._window_toks else np.zeros((0, B), np.int32)
+        assert step_toks.shape[0] == n, (step_toks.shape, n)
         sessions = self._window_sessions
         self._window_sessions = []
         self._window_steps = 0
+        self._window_toks = []
         self._window_t0 = now
         for s in sessions:
             s.last_token = int(toks[s.slot])
             s.token_times_s.extend(ts)
+            # every session in the window decoded exactly n tokens; its
+            # burst position before the window was (decoded - n)
+            base = s.decoded - n
+            dlen = s.current_turn.decode_len
+            for i in range(n):
+                self._emit(s, step_toks[i, s.slot], ts[i], index=base + i,
+                           turn_end=base + i + 1 >= dlen)
             self._after_token(s, now)
 
     def _after_token(self, sess: Session, now: float) -> None:
@@ -603,13 +661,21 @@ class ServingEngine:
         sess.turn_idx += 1
         sess.prefill_done = 0
         sess.decoded = 0
-        sess.state = SessionState.TOOL_CALL
-        sess.ready_s = now + sess.turns[sess.turn_idx - 1].tool_latency_s
+        if sess.external_tools:
+            # online mode: the gateway owns the tool-wait clock — the
+            # session parks in TOOL_WAIT until resume_session() re-arms
+            # it (satellite: tool latency is no longer an engine-side
+            # simulation detail for gateway sessions)
+            sess.state = SessionState.TOOL_WAIT
+            sess.ready_s = float("inf")
+        else:
+            sess.state = SessionState.TOOL_CALL
+            sess.ready_s = now + sess.turns[sess.turn_idx - 1].tool_latency_s
 
     # ------------------------------------------------------------------
     # resume prefills (batched, fused into the decode stream)
     # ------------------------------------------------------------------
-    def _resume_batch_step(self, by_id: Dict[int, Session]) -> bool:
+    def _resume_batch_step(self) -> bool:
         """Pack up to M resume jobs from Q_D into one [M, bucket]
         executable with per-row slots/lengths.  M rounds down to a
         warmed batch size; leftover jobs stay at the queue head."""
@@ -617,7 +683,7 @@ class ServingEngine:
         jobs: List[Tuple[Job, Session]] = []
         while qd and len(jobs) < self._resume_levels[-1]:
             job = qd.popleft()
-            s = by_id[job.session_id]
+            s = self._sessions[job.session_id]
             if s.state == SessionState.PREFILLING and s.remaining_prefill > 0:
                 jobs.append((job, s))
         if not jobs:
@@ -668,9 +734,9 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def _admit(self, sessions: Sequence[Session]) -> None:
+    def _admit(self) -> None:
         now = self._clock()
-        for s in sessions:
+        for s in self._sessions.values():
             if s.state == SessionState.WAITING_PREFILL and s.ready_s <= now:
                 if self.pool.free_slots == 0:
                     continue  # backpressure: retry next cycle
@@ -678,6 +744,16 @@ class ServingEngine:
                 self._maybe_restore_prefix(s)
                 self._submit(s, now)
             elif s.state == SessionState.TOOL_CALL and s.ready_s <= now:
+                if s.slot < 0:
+                    # parked during TOOL_WAIT (release-under-pressure
+                    # policy): needs a fresh slot + a lossless restore
+                    # before its resume prefill may run
+                    if self.pool.free_slots == 0:
+                        continue  # backpressure: retry next cycle
+                    s.slot = self.pool.alloc()
+                    self.pool.unpark(s.slot,
+                                     self._parked.pop(s.session_id))
+                    self.hotpath_stats["unparks"] += 1
                 self._submit(s, now)
 
     def _maybe_restore_prefix(self, s: Session) -> None:
@@ -693,6 +769,10 @@ class ServingEngine:
     def _submit(self, s: Session, now: float) -> None:
         s.arrival_s = now
         s.request_arrivals.append(now)
+        # queue delay: how long the request sat ready (slot/backpressure
+        # wait) before admission — the open-loop breakdown metric
+        s.queue_delays_s.append(max(0.0, now - s.ready_s)
+                                if np.isfinite(s.ready_s) else 0.0)
         s.state = SessionState.PREFILLING
         new_len = s.remaining_prefill
         if self.policy.split_phases:
@@ -708,79 +788,197 @@ class ServingEngine:
             self.queues.q_prefill.append(job)
 
     # ------------------------------------------------------------------
-    # main loop
+    # reactor surface: attach / step / poll-state (DESIGN.md §6)
     # ------------------------------------------------------------------
     def _clock(self) -> float:
         return time.perf_counter() - self._t0
 
-    def run(self, sessions: Sequence[Session],
-            thresholds: Optional[SLOThresholds] = None) -> ServingReport:
-        by_id = {s.session_id: s for s in sessions}
-        self._t0 = time.perf_counter()
-        next_ctrl = self.ecfg.control_interval_s
-        policy, ecfg = self.policy, self.ecfg
-        C = ecfg.cycle_budget
+    clock = _clock                       # public alias for online drivers
 
-        if not policy.adaptive:
+    def attach(self, session: Session) -> None:
+        """Register a session with the reactor.  ``run()`` attaches its
+        whole cohort up front; the online gateway attaches live requests
+        one at a time between cycles."""
+        if session.session_id in self._sessions:
+            raise ValueError(
+                f"duplicate session_id {session.session_id}")
+        self._sessions[session.session_id] = session
+
+    def start_online(self) -> None:
+        """Arm the reactor for open-ended stepping: apply the run-start
+        policy state without resetting the engine clock (the gateway's
+        arrival timestamps are engine-clock values)."""
+        self._begin()
+
+    def _begin(self) -> None:
+        ecfg = self.ecfg
+        if not self.policy.adaptive:
             self.scheduler.state.r_min = max(
                 ecfg.granularity,
-                int(policy.static_r_frac * C) // ecfg.granularity
-                * ecfg.granularity)
+                int(self.policy.static_r_frac * ecfg.cycle_budget)
+                // ecfg.granularity * ecfg.granularity)
+        self._next_ctrl = self._clock() + ecfg.control_interval_s
 
-        while any(s.state != SessionState.FINISHED for s in sessions):
-            now = self._clock()
-            if now > ecfg.max_wall_s:
-                break
-            self._admit(sessions)
+    def pending(self) -> bool:
+        return any(s.state != SessionState.FINISHED
+                   for s in self._sessions.values())
 
-            # ---- control update + slot rebind (Algorithm 1) ----------
-            if now >= next_ctrl:
-                self._flush_decode()     # fresh TPOT for the controller
-                if policy.adaptive:
-                    self.scheduler.update()
-                next_ctrl = now + ecfg.control_interval_s
-            slot_exec, level = self.slots.bind(self.scheduler.state.r_min)
+    def sessions(self) -> List[Session]:
+        """All attached sessions (online reporting reads these)."""
+        return list(self._sessions.values())
 
-            active = [s for s in sessions if s.state == SessionState.DECODING]
-            q_d, q_p = self.queues.occupancy()
+    def detach(self, session_id: int) -> None:
+        """Drop a FINISHED session from the registry.  Long-lived online
+        drivers must detach completed sessions or every cycle's
+        admission scan (and process memory) grows without bound; the
+        reactor does this automatically on ``session_end``."""
+        s = self._sessions.get(session_id)
+        if s is None:
+            return
+        if s.state != SessionState.FINISHED:
+            raise ValueError(f"cannot detach live session {session_id} "
+                             f"({s.state})")
+        del self._sessions[session_id]
 
-            did_work = False
-            # ---- decode stream ----------------------------------------
-            allow_decode = policy.protect_decode or q_p == 0
-            if active and allow_decode:
-                self._decode_dispatch(active, now, next_ctrl, q_d, q_p)
-                did_work = True
-            elif not active:
-                self._flush_decode()
-                self._window_t0 = None
+    def step(self) -> List[TokenEvent]:
+        """One reactor cycle — exactly the pre-refactor ``run()`` loop
+        body: admission, the control update + slot rebind, at most one
+        decode dispatch, batched resume prefills, and the budgeted
+        prefill-stream work.  Non-blocking apart from the sampled-
+        cadence decode flush.  Returns the token events this cycle
+        emitted (``last_step_did_work`` tells idle-sleep callers whether
+        anything was dispatched)."""
+        policy, ecfg = self.policy, self.ecfg
+        now = self._clock()
+        self._admit()
 
-            # ---- resume prefills fused into the decode stream --------
-            if policy.resume_to_decode_queue and self.queues.q_decode:
-                did_work |= self._resume_batch_step(by_id)
+        # ---- control update + slot rebind (Algorithm 1) ----------
+        if now >= self._next_ctrl:
+            self._flush_decode()         # fresh TPOT for the controller
+            if policy.adaptive:
+                self.scheduler.update()
+            self._next_ctrl = now + ecfg.control_interval_s
+        slot_exec, level = self.slots.bind(self.scheduler.state.r_min)
 
-            # ---- prefill stream (cold / over-budget / phase-blind) ----
-            did_work |= self._prefill_stream_step(by_id, slot_exec)
-            if not active and self.queues.q_prefill and policy.chunk_by_slots:
-                # opportunistic reclaim (paper §III-C): no decode demand,
-                # so the prefill stream claims the full cycle budget
-                full_exec, _ = self.slots.bind(self.scheduler.cfg.r_base)
-                for _ in range(3):
-                    if (self.queues.q_prefill
-                            and not any(s.state == SessionState.DECODING
-                                        for s in sessions)):
-                        self._prefill_stream_step(by_id, full_exec)
-                    else:
-                        break
+        sessions = self._sessions.values()
+        active = [s for s in sessions if s.state == SessionState.DECODING]
+        q_d, q_p = self.queues.occupancy()
 
+        did_work = False
+        # ---- decode stream ----------------------------------------
+        allow_decode = policy.protect_decode or q_p == 0
+        if active and allow_decode:
+            self._decode_dispatch(active, now, self._next_ctrl, q_d, q_p)
+            did_work = True
+        elif not active:
+            self._flush_decode()
+            self._window_t0 = None
+
+        # ---- resume prefills fused into the decode stream --------
+        if policy.resume_to_decode_queue and self.queues.q_decode:
+            did_work |= self._resume_batch_step()
+
+        # ---- prefill stream (cold / over-budget / phase-blind) ----
+        did_work |= self._prefill_stream_step(slot_exec)
+        if not active and self.queues.q_prefill and policy.chunk_by_slots:
+            # opportunistic reclaim (paper §III-C): no decode demand,
+            # so the prefill stream claims the full cycle budget
+            full_exec, _ = self.slots.bind(self.scheduler.cfg.r_base)
+            for _ in range(3):
+                if (self.queues.q_prefill
+                        and not any(s.state == SessionState.DECODING
+                                    for s in sessions)):
+                    self._prefill_stream_step(full_exec)
+                else:
+                    break
+
+        if len(self.trace) < ecfg.trace_max:
             self.trace.append(dict(
                 t=self._clock(), tpot_ms=self.scheduler.state.tpot_step_ms,
                 r_min=self.scheduler.state.r_min,
                 b_prefill=self.scheduler.state.b_prefill,
                 q_d=q_d, q_p=q_p, active=len(active)))
-            if not did_work:
+        self.last_step_did_work = did_work
+        events, self._events = self._events, []
+        return events
+
+    def flush(self) -> None:
+        """Host-sync any in-flight decode window (online drivers call
+        this at shutdown; ``run()`` calls it before building the
+        report)."""
+        self._flush_decode()
+
+    # ---- online session control --------------------------------------
+    def resume_session(self, session_id: int) -> None:
+        """Re-arm a TOOL_WAIT session for its next turn.  The gateway
+        calls this when the (real or simulated) tool completes — the
+        tool-wait clock lives in the gateway, not the engine."""
+        s = self._sessions[session_id]
+        if s.state != SessionState.TOOL_WAIT:
+            raise ValueError(
+                f"session {session_id} not in TOOL_WAIT ({s.state})")
+        s.state = SessionState.TOOL_CALL
+        s.ready_s = self._clock()
+
+    def park_session(self, session_id: int) -> None:
+        """Release a TOOL_WAIT session's KV slot under pressure: the
+        slot's cache rows (attention KV *and* SSM states) are
+        snapshotted host-invisibly on device, the slot is freed for a
+        waiting session, and the resume path restores the snapshot into
+        a fresh slot — lossless, so the resume prefill is bit-identical
+        to the held-slot path."""
+        s = self._sessions[session_id]
+        if s.state != SessionState.TOOL_WAIT:
+            raise ValueError(
+                f"session {session_id} not in TOOL_WAIT ({s.state})")
+        if s.slot < 0:
+            return                       # already parked
+        self._parked[session_id] = self.pool.park(s.slot)
+        s.slot = -1
+        self.hotpath_stats["parks"] += 1
+
+    def slot_pressure(self) -> bool:
+        """True when a waiting session is blocked on slot exhaustion —
+        the gateway's trigger for the release-under-pressure policy."""
+        if self.pool.free_slots > 0:
+            return False
+        return any(s.state == SessionState.WAITING_PREFILL
+                   or (s.state == SessionState.TOOL_CALL and s.slot < 0)
+                   for s in self._sessions.values())
+
+    def admission_occupancy(self) -> int:
+        """Open-loop load signal for the gateway watermark: queued jobs
+        in both admission queues plus sessions still waiting for a KV
+        slot."""
+        q_d, q_p = self.queues.occupancy()
+        waiting = sum(1 for s in self._sessions.values()
+                      if s.state == SessionState.WAITING_PREFILL)
+        return q_d + q_p + waiting
+
+    # ------------------------------------------------------------------
+    # closed-loop batch API (Fig 5) — reimplemented on the reactor
+    # ------------------------------------------------------------------
+    def run(self, sessions: Sequence[Session],
+            thresholds: Optional[SLOThresholds] = None) -> ServingReport:
+        self._sessions = {}
+        for s in sessions:
+            self.attach(s)
+        self._t0 = time.perf_counter()
+        self._begin()
+        ecfg = self.ecfg
+        self.event_log = []
+
+        while self.pending():
+            if self._clock() > ecfg.max_wall_s:
+                break
+            events = self.step()
+            if ecfg.record_events:
+                self.event_log.extend(events)
+            if not self.last_step_did_work:
                 time.sleep(0.0005)
 
         self._flush_decode()
+        self._events.clear()
         wall = self._clock()
         extra = {
             "rebinds": float(self.slots.stats.rebinds),
@@ -789,8 +987,8 @@ class ServingEngine:
             "prefix_hits": float(self.pool.stats["prefix_hits"]),
         }
         extra.update({k: float(v) for k, v in self.hotpath_stats.items()})
-        return build_report(policy.name, list(sessions), wall, thresholds,
-                            extra)
+        return build_report(self.policy.name, list(sessions), wall,
+                            thresholds, extra)
 
     # ------------------------------------------------------------------
     def _bucket_for(self, n: int) -> int:
@@ -799,13 +997,14 @@ class ServingEngine:
                 return b
         return self._buckets[-1]
 
-    def _prefill_stream_step(self, by_id, slot_exec) -> bool:
+    def _prefill_stream_step(self, slot_exec) -> bool:
         qp = self.queues.q_prefill
-        while qp and by_id[qp[0].session_id].state != SessionState.PREFILLING:
+        while qp and (self._sessions[qp[0].session_id].state
+                      != SessionState.PREFILLING):
             qp.popleft()                 # drop stale entries at the head
         if not qp:
             return False
-        s = by_id[qp[0].session_id]
+        s = self._sessions[qp[0].session_id]
         if s.remaining_prefill == 0:
             # unreachable with our workloads (shared prefix < full prompt);
             # would require a last-token re-run that is unsafe for SSM state
@@ -823,7 +1022,7 @@ class ServingEngine:
             budget, bound_fn = self._fixed_chunk(), None
         if budget <= 0:
             return False
-        if self._cold_pack_step(by_id, budget):
+        if self._cold_pack_step(budget):
             return True
         chunk, fn, reps = self._tuned_chunk(budget, bound_fn)
         for _ in range(reps):
@@ -834,7 +1033,7 @@ class ServingEngine:
             qp.popleft()
         return True
 
-    def _cold_pack_step(self, by_id, budget: int) -> bool:
+    def _cold_pack_step(self, budget: int) -> bool:
         """Pack the first M pending prefills from Q_P into one
         [M, bucket] batched executable (the same machinery — and warmed
         shapes — as batched resume), with bucket·M ≤ the cycle's prefill
@@ -846,7 +1045,7 @@ class ServingEngine:
         jobs: List[Tuple[Job, Session]] = []
         while qp and len(jobs) < self._cold_levels[-1]:
             job = qp.popleft()
-            s = by_id[job.session_id]
+            s = self._sessions[job.session_id]
             if s.state != SessionState.PREFILLING:
                 continue                 # stale entry: drop, as the head does
             if s.remaining_prefill == 0:

@@ -1,0 +1,346 @@
+"""Online serving gateway: async streaming sessions over the reactor.
+
+This is the layer that makes the repro an *online* system (DESIGN.md
+§6): live requests arrive at any time, stream their tokens back as they
+are decoded, wait out their tool calls under the gateway's clock, and
+are shed with 429-style rejections when open-loop pressure crosses the
+admission watermark.  The gateway owns:
+
+  * the **reactor loop** — a single asyncio task that serialises all
+    engine access: it ingests queued submissions/resumes between
+    cycles, advances the engine one ``step()`` at a time (in a worker
+    thread, so the event loop keeps serving tool timers and HTTP
+    clients during device work), and fans the cycle's ``TokenEvent``s
+    out to per-session asyncio queues;
+  * the **session state machine** — PREFILL → DECODE → TOOL_WAIT →
+    RESUME → DONE.  ``turn_end`` events move a session into TOOL_WAIT,
+    where the *gateway* (not the engine) runs the tool: either the
+    configured ``tool_fn`` or an ``asyncio.sleep`` of the turn's
+    simulated latency.  On completion the session re-enters the engine
+    via ``reactor.resume`` (RESUME) and decodes its next turn with its
+    KV intact;
+  * the **KV-slot policy** during TOOL_WAIT — ``hold`` keeps the slot
+    (lowest resume latency), ``release`` parks the slot's cache rows
+    on device and frees it when another session is blocked on slot
+    exhaustion (higher utilisation; the restore is lossless);
+  * **admission** — a hysteretic ``WatermarkGate`` over queue + slot
+    occupancy; ``reject`` mode sheds immediately (429), ``queue`` mode
+    waits briefly for the gate to reopen before shedding.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import enum
+import itertools
+from typing import AsyncIterator, Awaitable, Callable, Deque, Dict, List, \
+    Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.admission import WatermarkGate
+from repro.serving.reactor import EngineReactor, RequestHandle, TokenEvent
+from repro.serving.request import Session
+
+# tool_fn(session, completed_turn_idx) -> optional replacement tokens
+# for the *next* turn's prefill (a real tool's output); None keeps the
+# scripted tokens.
+ToolFn = Callable[[Session, int], Awaitable[Optional[np.ndarray]]]
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    high_watermark: int = 8          # occupancy that closes the gate
+    low_watermark: int = -1          # reopen level (default high // 2)
+    admission: str = "reject"        # reject -> immediate 429 | queue
+    max_queue: int = 32              # queue mode: max concurrent waiters
+    queue_timeout_s: float = 2.0     # queue mode: wait bound before 429
+    tool_policy: str = "hold"        # hold | release (KV slot in TOOL_WAIT)
+    idle_sleep_s: float = 0.001      # reactor loop sleep when no work
+    step_in_thread: bool = True      # run engine.step off the event loop
+    completed_history: int = 10_000  # finished Sessions kept for reports
+
+
+class GatewayState(enum.Enum):
+    PREFILL = "prefill"
+    DECODE = "decode"
+    TOOL_WAIT = "tool_wait"
+    RESUME = "resume"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Rejected:
+    """429-style admission result."""
+    status: int = 429
+    reason: str = "admission watermark exceeded"
+    occupancy: int = 0
+
+
+class LiveSession:
+    """Gateway-owned handle for one streaming agent session."""
+
+    def __init__(self, session: Session):
+        self.session = session
+        self.handle: Optional[RequestHandle] = None
+        self.state = GatewayState.PREFILL
+        self.queue: "asyncio.Queue[Optional[TokenEvent]]" = asyncio.Queue()
+        self.received: List[TokenEvent] = []
+
+    @property
+    def session_id(self) -> int:
+        return self.session.session_id
+
+    async def events(self) -> AsyncIterator[TokenEvent]:
+        """Stream this session's tokens as they are decoded; terminates
+        after the final turn's last token."""
+        while True:
+            ev = await self.queue.get()
+            if ev is None:
+                return
+            self.received.append(ev)
+            yield ev
+
+
+class AgentGateway:
+    """Asyncio front for one ``ServingEngine`` (single engine, many
+    concurrent streaming clients)."""
+
+    def __init__(self, engine, config: Optional[GatewayConfig] = None,
+                 tool_fn: Optional[ToolFn] = None):
+        self.engine = engine
+        self.reactor = EngineReactor(engine)
+        self.cfg = config or GatewayConfig()
+        if self.cfg.tool_policy not in ("hold", "release"):
+            raise ValueError(f"unknown tool_policy {self.cfg.tool_policy}")
+        if self.cfg.admission not in ("reject", "queue"):
+            raise ValueError(f"unknown admission mode {self.cfg.admission}")
+        self.gate = WatermarkGate(self.cfg.high_watermark,
+                                  self.cfg.low_watermark)
+        self.tool_fn = tool_fn
+        self._live: Dict[int, LiveSession] = {}
+        # engine ops staged by submit()/tool tasks, drained by the
+        # reactor loop between cycles — the engine is only ever touched
+        # from the loop, so no locking is needed
+        self._ops: Deque[Tuple[str, LiveSession]] = collections.deque()
+        self._ids = itertools.count()
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+        self._waiters = 0
+        self._tool_tasks: set = set()
+        # finished sessions, retained (bounded) for open-loop reporting
+        # — the engine/reactor detach them at session_end
+        self.completed_sessions: Deque[Session] = collections.deque(
+            maxlen=self.cfg.completed_history)
+        self.counters = {"submitted": 0, "rejected": 0, "completed": 0,
+                         "parked": 0, "tool_calls": 0, "tool_errors": 0}
+
+    # ---- lifecycle ----------------------------------------------------
+    async def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("gateway already started")
+        self._running = True
+        self._task = asyncio.create_task(self._loop())
+
+    async def stop(self, timeout_s: Optional[float] = None) -> None:
+        """Stop accepting new work and drain in-flight sessions; cancel
+        the loop if the drain exceeds ``timeout_s``."""
+        self._running = False
+        if self._task is None:
+            return
+        try:
+            await asyncio.wait_for(asyncio.shield(self._task), timeout_s)
+        except asyncio.TimeoutError:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+        self._task = None
+
+    # ---- admission ----------------------------------------------------
+    def occupancy(self) -> int:
+        return self.engine.admission_occupancy() + len(self._ops)
+
+    async def submit(self, session: Session,
+                     ) -> Union[LiveSession, Rejected]:
+        """Admit a live agent session — or shed it at the watermark.
+        The returned ``LiveSession`` streams tokens via ``events()``."""
+        occ = self.occupancy()
+        if not self.gate.check(occ) and self.cfg.admission == "queue":
+            occ = await self._wait_for_gate(occ)
+        if not self.gate.offer(occ):
+            self.counters["rejected"] += 1
+            return Rejected(occupancy=occ)
+        session.session_id = next(self._ids)
+        session.external_tools = True    # gateway owns the tool clock
+        live = LiveSession(session)
+        self._live[session.session_id] = live
+        self._ops.append(("submit", live))
+        self.counters["submitted"] += 1
+        return live
+
+    async def _wait_for_gate(self, occ: int) -> int:
+        """Queue-mode admission: wait (bounded) for the gate to reopen
+        instead of shedding immediately."""
+        if self._waiters >= self.cfg.max_queue:
+            return occ                   # queue full -> let offer() shed
+        self._waiters += 1
+        try:
+            deadline = (asyncio.get_running_loop().time()
+                        + self.cfg.queue_timeout_s)
+            while not self.gate.check(occ := self.occupancy()):
+                if asyncio.get_running_loop().time() >= deadline:
+                    break
+                await asyncio.sleep(self.cfg.idle_sleep_s * 5)
+        finally:
+            self._waiters -= 1
+        return occ
+
+    # ---- the reactor loop ---------------------------------------------
+    async def _loop(self) -> None:
+        cfg = self.cfg
+        while self._running or self._ops or self.reactor.pending():
+            while self._ops:
+                op, live = self._ops.popleft()
+                if op == "submit":
+                    live.handle = self.reactor.submit(live.session)
+                else:                    # "resume"
+                    self.reactor.resume(live.handle)
+            self._park_under_pressure()
+            if cfg.step_in_thread:
+                events = await asyncio.to_thread(self.reactor.step)
+            else:
+                events = self.reactor.step()
+                await asyncio.sleep(0)   # let clients/timers breathe
+            for ev in events:
+                self._route(ev)
+            if not events and not self.reactor.did_work and not self._ops:
+                await asyncio.sleep(cfg.idle_sleep_s)
+        self.engine.flush()
+
+    def _route(self, ev: TokenEvent) -> None:
+        live = self._live.get(ev.session_id)
+        if live is None:
+            return
+        live.queue.put_nowait(ev)
+        if ev.first:
+            live.state = GatewayState.DECODE
+        if ev.session_end:
+            live.state = GatewayState.DONE
+            live.queue.put_nowait(None)  # stream terminator
+            self.counters["completed"] += 1
+            self.completed_sessions.append(live.session)
+            del self._live[ev.session_id]
+        elif ev.turn_end:
+            live.state = GatewayState.TOOL_WAIT
+            task = asyncio.get_running_loop().create_task(
+                self._tool_wait(live, ev.turn_idx))
+            self._tool_tasks.add(task)
+            task.add_done_callback(self._tool_tasks.discard)
+
+    def _park_under_pressure(self) -> None:
+        """release policy, checked every loop iteration (not just at
+        TOOL_WAIT entry): whenever a waiting session is blocked on slot
+        exhaustion, park TOOL_WAIT sessions that still hold a slot
+        until the pressure clears."""
+        if self.cfg.tool_policy != "release":
+            return
+        for live in list(self._live.values()):
+            if not self.engine.slot_pressure():
+                return
+            if (live.state == GatewayState.TOOL_WAIT
+                    and live.session.slot >= 0):
+                self.engine.park_session(live.session_id)
+                self.counters["parked"] += 1
+
+    async def _tool_wait(self, live: LiveSession, turn_idx: int) -> None:
+        """The tool half of an agent turn, on the gateway's clock.
+
+        A tool_fn failure must not wedge the session in TOOL_WAIT (the
+        client's stream would hang forever): the error is counted and
+        the session resumes with its scripted next-turn tokens."""
+        sess = live.session
+        self.counters["tool_calls"] += 1
+        try:
+            if self.tool_fn is not None:
+                next_tokens = await self.tool_fn(sess, turn_idx)
+                if next_tokens is not None:
+                    # a real tool's output replaces the next turn's
+                    # scripted prefill (safe: that prefill hasn't started)
+                    sess.turns[turn_idx + 1].prefill_tokens = np.asarray(
+                        next_tokens, np.int32)
+            else:
+                await asyncio.sleep(sess.turns[turn_idx].tool_latency_s)
+        except asyncio.CancelledError:
+            raise
+        except Exception:
+            self.counters["tool_errors"] += 1
+        live.state = GatewayState.RESUME
+        self._ops.append(("resume", live))
+
+    # ---- observability -------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        q_d, q_p = self.engine.queues.occupancy()
+        return {
+            **{k: float(v) for k, v in self.counters.items()},
+            "gate_admitted": float(self.gate.admitted),
+            "gate_rejected": float(self.gate.rejected),
+            "gate_shedding": float(self.gate.shedding),
+            "occupancy": float(self.occupancy()),
+            "q_decode": float(q_d),
+            "q_prefill": float(q_p),
+            "free_slots": float(self.engine.pool.free_slots),
+            "live_sessions": float(len(self._live)),
+            "engine_parks": float(self.engine.hotpath_stats["parks"]),
+            "engine_unparks": float(self.engine.hotpath_stats["unparks"]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# open-loop driver (benchmarks, tests, --serve-smoke)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpenLoopRun:
+    completed: List[Session]
+    rejected: List[Session]
+    events: List[Tuple[float, TokenEvent]]   # (driver wall time, event)
+    wall_s: float
+
+    def interleaved(self) -> bool:
+        """True when token events from different sessions interleave —
+        the observable signature of concurrent streaming."""
+        switches = sum(1 for a, b in zip(self.events, self.events[1:])
+                       if a[1].session_id != b[1].session_id)
+        return switches > len({e.session_id for _, e in self.events})
+
+
+async def drive_open_loop(gateway: AgentGateway, sessions: List[Session],
+                          arrivals, *, time_scale: float = 1.0,
+                          ) -> OpenLoopRun:
+    """Submit ``sessions`` at their open-loop ``arrivals`` offsets (wall
+    clock, scaled by ``time_scale``) and consume every stream to
+    completion.  One asyncio task per agent — the client side of the
+    paper's overlapping multi-agent arrival pattern."""
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    run = OpenLoopRun(completed=[], rejected=[], events=[], wall_s=0.0)
+
+    async def one(sess: Session, at: float) -> None:
+        delay = at * time_scale - (loop.time() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        res = await gateway.submit(sess)
+        if isinstance(res, Rejected):
+            run.rejected.append(sess)
+            return
+        async for ev in res.events():
+            run.events.append((loop.time() - t0, ev))
+        run.completed.append(sess)
+
+    await asyncio.gather(*(one(s, float(a))
+                           for s, a in zip(sessions, arrivals)))
+    run.wall_s = loop.time() - t0
+    return run

@@ -80,7 +80,7 @@ class KVCachePool:
             for layer in self.cache.values())
         self.stats = {"alloc": 0, "free": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefix_refreshes": 0,
-                      "evictions": 0}
+                      "evictions": 0, "parks": 0, "unparks": 0}
 
     # ---- slot lifecycle -------------------------------------------------
     def alloc(self) -> int:
@@ -168,6 +168,29 @@ class KVCachePool:
         key = min(self._prefix, key=lambda k: self._prefix[k].last_used)
         del self._prefix[key]
         self.stats["evictions"] += 1
+
+    # ---- tool-wait parking ----------------------------------------------
+    def park(self, slot: int) -> PrefixEntry:
+        """Snapshot a slot's full cache rows (attention KV + SSM states)
+        and free the slot — the release-under-pressure half of the
+        TOOL_WAIT policy.  Unlike prefix entries, the caller owns the
+        returned snapshot (it is not registered in the LRU-evictable
+        prefix store), so a parked session can never lose its state to
+        cache churn."""
+        entry = PrefixEntry(
+            snapshot=_fused_snapshot(self.cache, jnp.int32(slot)),
+            length=int(self.lengths[slot]))
+        self.free(slot)
+        self.stats["parks"] += 1
+        return entry
+
+    def unpark(self, slot: int, entry: PrefixEntry) -> None:
+        """Restore a parked snapshot into a freshly allocated slot.  The
+        restore is the same fused scatter as a prefix hit, and exact at
+        the parked length, so the subsequent resume prefill sees
+        bit-identical state to a session that held its slot."""
+        self.restore_prefix(slot, entry)
+        self.stats["unparks"] += 1
 
     # ---- step integration -------------------------------------------------
     def lengths_device(self) -> jax.Array:

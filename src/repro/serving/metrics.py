@@ -95,6 +95,105 @@ def session_slo_ok(s: Session, thr: SLOThresholds) -> bool:
     return True
 
 
+def collect_queue_delays(sessions: Sequence[Session]) -> List[float]:
+    """Per-request admission wait (request ready -> admitted)."""
+    out: List[float] = []
+    for s in sessions:
+        out.extend(s.queue_delays_s)
+    return out
+
+
+def collect_open_loop_ttfts(sessions: Sequence[Session]) -> List[float]:
+    """Open-loop TTFT: request *ready* (arrival-process timestamp or
+    tool completion) -> first token.  Differs from the closed-loop TTFT
+    by the queue delay — under open-loop pressure the admission wait is
+    the dominant term, and hiding it would make an overloaded server
+    look healthy."""
+    out = []
+    for s in sessions:
+        for arr, first, qd in zip(s.request_arrivals, s.first_token_s,
+                                  s.queue_delays_s):
+            out.append((first - arr) + qd)
+    return out
+
+
+@dataclasses.dataclass
+class OpenLoopReport:
+    """Goodput-vs-offered-rate row for the gateway benchmark.
+
+    ``goodput_tok_s`` counts output tokens only from sessions that met
+    the SLO (equal to throughput when no thresholds are given);
+    ``rejected`` counts 429-style watermark shed."""
+    policy: str
+    offered_rps: float
+    submitted: int
+    completed: int
+    rejected: int
+    wall_time_s: float
+    goodput_tok_s: float
+    throughput_tok_s: float
+    ttft_p50_s: float
+    ttft_p95_s: float
+    tpot_p50_s: float
+    tpot_p95_s: float
+    queue_delay_p50_s: float
+    queue_delay_p95_s: float
+    slo_attainment: float
+
+    def row(self) -> str:
+        return (f"{self.policy},{self.offered_rps:.3f},{self.submitted},"
+                f"{self.completed},{self.rejected},{self.wall_time_s:.3f},"
+                f"{self.goodput_tok_s:.1f},{self.throughput_tok_s:.1f},"
+                f"{self.ttft_p50_s * 1e3:.1f},{self.ttft_p95_s * 1e3:.1f},"
+                f"{self.tpot_p50_s * 1e3:.1f},{self.tpot_p95_s * 1e3:.1f},"
+                f"{self.queue_delay_p50_s * 1e3:.1f},"
+                f"{self.queue_delay_p95_s * 1e3:.1f},"
+                f"{self.slo_attainment:.3f}")
+
+    HEADER = ("policy,offered_rps,submitted,completed,rejected,wall_s,"
+              "goodput_tok_s,throughput_tok_s,ttft_p50_ms,ttft_p95_ms,"
+              "tpot_p50_ms,tpot_p95_ms,qdelay_p50_ms,qdelay_p95_ms,"
+              "slo_rate")
+
+
+def build_open_loop_report(policy: str, sessions: Sequence[Session],
+                           wall_time_s: float, offered_rps: float,
+                           rejected: int = 0,
+                           thresholds: Optional[SLOThresholds] = None,
+                           ) -> OpenLoopReport:
+    """Open-loop rollup over the *completed* sessions of one offered-rate
+    run (rejected submissions are counted, not measured)."""
+    ttfts = collect_open_loop_ttfts(sessions)
+    tpots = collect_tpots(sessions)
+    qdelays = collect_queue_delays(sessions)
+    total_tokens = sum(s.output_tokens() for s in sessions)
+    wall = max(wall_time_s, 1e-9)
+    slo = float("nan")
+    good_tokens = total_tokens
+    if thresholds is not None and sessions:
+        oks = [session_slo_ok(s, thresholds) for s in sessions]
+        slo = float(np.mean(oks))
+        good_tokens = sum(s.output_tokens()
+                          for s, ok in zip(sessions, oks) if ok)
+    return OpenLoopReport(
+        policy=policy,
+        offered_rps=offered_rps,
+        submitted=len(sessions) + rejected,
+        completed=len(sessions),
+        rejected=rejected,
+        wall_time_s=wall_time_s,
+        goodput_tok_s=good_tokens / wall,
+        throughput_tok_s=total_tokens / wall,
+        ttft_p50_s=_pct(ttfts, 50),
+        ttft_p95_s=_pct(ttfts, 95),
+        tpot_p50_s=_pct(tpots, 50),
+        tpot_p95_s=_pct(tpots, 95),
+        queue_delay_p50_s=_pct(qdelays, 50),
+        queue_delay_p95_s=_pct(qdelays, 95),
+        slo_attainment=slo,
+    )
+
+
 def build_report(policy: str, sessions: Sequence[Session],
                  wall_time_s: float,
                  thresholds: Optional[SLOThresholds] = None,

@@ -12,7 +12,9 @@ class SessionState(enum.Enum):
     WAITING_PREFILL = "waiting_prefill"   # request submitted, not started
     PREFILLING = "prefilling"             # chunks in flight
     DECODING = "decoding"
-    TOOL_CALL = "tool_call"               # waiting on (simulated) tool
+    TOOL_CALL = "tool_call"               # engine-clocked tool wait
+    TOOL_WAIT = "tool_wait"               # gateway-clocked tool wait:
+    #                                       resume_session() re-arms it
     FINISHED = "finished"
 
 
@@ -31,6 +33,7 @@ class Session:
     turns: List[AgentTurn]
     workload: str = "react"           # react | plan_execute
     shared_prefix_len: int = 0        # leading tokens shared across sessions
+    external_tools: bool = False      # gateway owns the tool-wait clock
     # runtime state
     state: SessionState = SessionState.WAITING_PREFILL
     turn_idx: int = 0
@@ -45,6 +48,9 @@ class Session:
     request_arrivals: List[float] = dataclasses.field(default_factory=list)
     first_token_s: List[float] = dataclasses.field(default_factory=list)
     token_times_s: List[float] = dataclasses.field(default_factory=list)
+    # per-request admission wait (request ready -> admitted), aligned
+    # with request_arrivals — the open-loop queue-delay breakdown
+    queue_delays_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def current_turn(self) -> Optional[AgentTurn]:

@@ -118,6 +118,79 @@ def make_workload(num_sessions: int, *, workload: str = "react",
     return sessions
 
 
+# ---------------------------------------------------------------------------
+# open-loop arrival processes (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(rate_rps: float, n: int, seed: int = 0,
+                     start_s: float = 0.0) -> np.ndarray:
+    """``n`` seeded-deterministic Poisson arrival times at ``rate_rps``
+    requests/s.  Open-loop: arrivals do not wait for service, which is
+    what creates the HOL-blocking queueing regime the paper studies —
+    a closed cohort can never over-subscribe the engine."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be positive, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    return start_s + np.cumsum(gaps)
+
+
+def save_arrival_trace(path: str, arrivals: np.ndarray) -> None:
+    """One arrival timestamp (seconds, float) per line."""
+    with open(path, "w") as f:
+        for t in np.asarray(arrivals, dtype=float):
+            f.write(f"{t:.9f}\n")
+
+
+def load_arrival_trace(path: str) -> np.ndarray:
+    """Replay a recorded arrival trace (one float per line; blank lines
+    and ``#`` comments ignored).  Times must be non-decreasing."""
+    times = []
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                times.append(float(line))
+    arr = np.asarray(times, dtype=float)
+    if arr.size and np.any(np.diff(arr) < 0):
+        raise ValueError(f"arrival trace {path} is not sorted")
+    return arr
+
+
+def make_open_loop_workload(num_sessions: int, *, workload: str = "react",
+                            vocab_size: int = 512, token_scale: float = 1.0,
+                            num_system_prompts: int = 1, seed: int = 0,
+                            rate_rps: Optional[float] = None,
+                            arrivals: Optional[np.ndarray] = None,
+                            trace_path: Optional[str] = None):
+    """Sessions with open-loop arrival times in ``ready_s``.
+
+    Exactly one arrival source: ``rate_rps`` (seeded Poisson),
+    ``arrivals`` (explicit times), or ``trace_path`` (trace-file
+    replay).  Session *content* is drawn with the same generator as the
+    closed-loop ``make_workload`` so Table-I distributions are
+    preserved; determinism follows from (seed, arrival source)."""
+    sources = sum(x is not None for x in (rate_rps, arrivals, trace_path))
+    if sources != 1:
+        raise ValueError("pass exactly one of rate_rps / arrivals / "
+                         "trace_path")
+    if rate_rps is not None:
+        arrivals = poisson_arrivals(rate_rps, num_sessions, seed=seed)
+    elif trace_path is not None:
+        arrivals = load_arrival_trace(trace_path)
+    arrivals = np.asarray(arrivals, dtype=float)
+    if len(arrivals) < num_sessions:
+        raise ValueError(f"need {num_sessions} arrivals, trace has "
+                         f"{len(arrivals)}")
+    sessions = make_workload(num_sessions, workload=workload,
+                             vocab_size=vocab_size, token_scale=token_scale,
+                             num_system_prompts=num_system_prompts,
+                             seed=seed, stagger_s=0.0)
+    for s, t in zip(sessions, arrivals):
+        s.ready_s = float(t)
+    return sessions
+
+
 def table1_statistics(workload: str, n: int = 200, seed: int = 0):
     """Empirical token distribution for benchmarks/table1_tokens.py."""
     rng = np.random.default_rng(seed)

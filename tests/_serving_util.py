@@ -1,0 +1,55 @@
+"""Shared serving-test helper: a turn-by-turn reference decode oracle.
+
+Greedy decoding is scheduling-independent — whatever order the engine
+interleaves prefill chunks and decode steps across sessions, each
+session's token stream must equal the stream produced by running that
+session *alone*: whole-prompt prefill, then one greedy decode step per
+token.  The oracle computes exactly that with the engine's own warmed
+executables, so regression tests can assert token-for-token identity
+for any engine/reactor/gateway drive path.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import get_executables
+from repro.serving.kvcache import KVCachePool
+
+
+def oracle_streams(cfg, params, sessions, *, num_slots, max_seq,
+                   moe_mode="dense"):
+    """{session_id: [token ids]} for each session decoded in isolation."""
+    ex = get_executables(cfg, num_slots, max_seq, moe_mode)
+    out = {}
+    for s in sessions:
+        pool = KVCachePool(cfg, num_slots, max_seq)
+        stream = []
+        length = 0
+        for turn in s.turns:
+            pt = np.asarray(turn.prefill_tokens, np.int32)
+            logits, pool.cache = ex.prefill(
+                params, pool.cache, jnp.asarray(pt[None]),
+                jnp.int32(0), jnp.int32(length), jnp.int32(len(pt) - 1))
+            length += len(pt)
+            tok = int(np.asarray(logits).argmax())
+            stream.append(tok)
+            for _ in range(turn.decode_len - 1):
+                tvec = np.zeros((num_slots,), np.int32)
+                lvec = np.zeros((num_slots,), np.int32)
+                tvec[0], lvec[0] = tok, length
+                logits2, pool.cache = ex.decode(
+                    params, pool.cache, jnp.asarray(tvec),
+                    jnp.asarray(lvec))
+                length += 1
+                tok = int(np.asarray(logits2)[0].argmax())
+                stream.append(tok)
+        out[s.session_id] = stream
+    return out
+
+
+def events_by_session(events):
+    """Group a TokenEvent list into {session_id: [token ids]} preserving
+    emission order."""
+    out = {}
+    for ev in events:
+        out.setdefault(ev.session_id, []).append(ev.token)
+    return out

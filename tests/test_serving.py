@@ -1,10 +1,15 @@
 """Serving substrate: KV pool invariants (hypothesis), workload Table-I
-distributions, metrics, and an end-to-end engine run per policy."""
+distributions, metrics, an end-to-end engine run per policy, and the
+reactor-refactor regression guard (golden trace + oracle streams)."""
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st
+from _serving_util import events_by_session, oracle_streams
 
 from repro.configs.base import ModelConfig
 from repro.models import init_params
@@ -12,8 +17,11 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.kvcache import KVCachePool
 from repro.serving.metrics import SLOThresholds, collect_tpots
 from repro.serving.policies import POLICIES
+from repro.serving.reactor import EngineReactor, HandleStatus
 from repro.serving.request import SessionState
 from repro.serving.workload import make_workload, table1_statistics
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "serving_golden.json"
 
 TINY = ModelConfig(name="tiny-serve", family="dense", num_layers=2,
                    d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
@@ -199,3 +207,120 @@ def test_no_green_pays_on_demand(tiny_engine_parts):
     eng = ServingEngine(TINY, params, POLICIES["no_green"], ecfg)
     eng.run(sessions)
     assert eng.slots.stats.misses >= 1      # built inside the serving path
+
+
+# ---------------------------------------------------------------------------
+# reactor refactor regression guard (golden trace + oracle streams)
+# ---------------------------------------------------------------------------
+
+def _golden_workload_and_engine(params, record_events=True):
+    g = json.loads(GOLDEN.read_text())
+    w = g["workload"]
+    sessions = make_workload(w["n"], workload=w["workload"],
+                             vocab_size=w["vocab_size"],
+                             token_scale=w["token_scale"],
+                             num_system_prompts=w["num_system_prompts"],
+                             seed=w["seed"], stagger_s=w["stagger_s"])
+    ecfg = EngineConfig(**g["engine_cfg"], record_events=record_events)
+    eng = ServingEngine(TINY, params, POLICIES["agentserve"], ecfg)
+    return g, sessions, eng
+
+
+def test_run_matches_pre_refactor_golden(tiny_engine_parts):
+    """run() rebuilt on the reactor must reproduce the pre-refactor
+    engine's golden trace: the deterministic ServingReport fields and
+    per-session outcomes recorded from commit 8559b36, plus
+    token-for-token identity of the emitted streams against the
+    scheduling-independent oracle."""
+    params, _ = tiny_engine_parts
+    g, sessions, eng = _golden_workload_and_engine(params)
+    rep = eng.run(sessions)
+
+    assert rep.policy == g["policy"]
+    assert rep.num_sessions == g["num_sessions"]
+    assert rep.total_output_tokens == g["total_output_tokens"]
+    assert eng.slots.stats.misses == g["slot_misses"]
+    for s, gs in zip(sessions, g["per_session"]):
+        assert s.session_id == gs["session_id"]
+        assert s.output_tokens() == gs["output_tokens"]
+        assert len(s.request_arrivals) == gs["num_requests"]
+        assert len(s.first_token_s) == gs["num_first_tokens"]
+        assert int(s.last_token) == gs["final_token"]
+        assert [t.decode_len for t in s.turns] == gs["turn_decode_lens"]
+
+    # token-for-token: the event stream run() recorded must equal the
+    # isolated greedy reference for every session
+    streams = events_by_session(eng.event_log)
+    want = oracle_streams(TINY, params, sessions,
+                          num_slots=eng.ecfg.num_slots,
+                          max_seq=eng.ecfg.max_seq)
+    for s in sessions:
+        assert streams[s.session_id] == want[s.session_id]
+        assert len(streams[s.session_id]) == s.output_tokens()
+
+
+def test_reactor_manual_drive_matches_run(tiny_engine_parts):
+    """Driving submit/step/poll by hand must produce the same streams
+    and session outcomes as the packaged run() loop."""
+    params, _ = tiny_engine_parts
+    g, sessions, eng = _golden_workload_and_engine(params)
+    reactor = EngineReactor(eng)
+    handles = [reactor.submit(s, arrival_s=s.ready_s) for s in sessions]
+    events = reactor.drain(max_wall_s=60.0)
+
+    assert all(reactor.poll(h) is HandleStatus.DONE for h in handles)
+    # poll-side delivery: every emitted event is also on its handle
+    assert sum(len(reactor.take_events(h)) for h in handles) == len(events)
+    streams = events_by_session(events)
+    want = oracle_streams(TINY, params, sessions,
+                          num_slots=eng.ecfg.num_slots,
+                          max_seq=eng.ecfg.max_seq)
+    for s, gs in zip(sessions, g["per_session"]):
+        assert streams[s.session_id] == want[s.session_id]
+        assert s.output_tokens() == gs["output_tokens"]
+        assert int(s.last_token) == gs["final_token"]
+
+
+def test_park_unpark_preserves_resume(tiny_engine_parts):
+    """A TOOL_WAIT session whose KV slot is released under pressure must
+    resume with a bit-identical stream: park snapshots the slot
+    (attention KV + any SSM state), the slot serves another session,
+    and unpark restores it losslessly."""
+    params, ecfg = tiny_engine_parts
+    sessions = make_workload(2, vocab_size=TINY.vocab_size,
+                             token_scale=0.0625, seed=4, stagger_s=0.0)
+    for s in sessions:
+        s.external_tools = True         # gateway-style tool clock
+    eng = ServingEngine(TINY, params, POLICIES["agentserve"], ecfg)
+    reactor = EngineReactor(eng)
+    handles = [reactor.submit(s) for s in sessions]
+    events = []
+    parked_once = False
+    for _ in range(200_000):
+        events.extend(reactor.step())
+        for s in sessions:
+            if s.state != SessionState.TOOL_WAIT:
+                continue
+            if not parked_once:
+                # the hold default: the slot is still owned in TOOL_WAIT
+                assert s.slot >= 0
+                free_before = eng.pool.free_slots
+                eng.park_session(s.session_id)
+                assert s.slot == -1
+                assert eng.pool.free_slots == free_before + 1
+                parked_once = True
+            eng.resume_session(s.session_id)   # tool done immediately
+        if not reactor.pending():
+            break
+    else:
+        raise AssertionError("sessions never finished")
+    reactor.drain(max_wall_s=10.0)
+    assert eng.hotpath_stats["parks"] == 1
+    assert eng.hotpath_stats["unparks"] == 1
+
+    streams = events_by_session(events)
+    want = oracle_streams(TINY, params, sessions,
+                          num_slots=ecfg.num_slots, max_seq=ecfg.max_seq)
+    for s in sessions:
+        assert streams[s.session_id] == want[s.session_id]
+    assert all(reactor.poll(h) is HandleStatus.DONE for h in handles)
