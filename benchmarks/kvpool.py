@@ -1,0 +1,216 @@
+"""KV pool benchmark: slab snapshot-copy vs paged zero-copy sharing
+(DESIGN.md §8).
+
+    PYTHONPATH=src python benchmarks/kvpool.py [--smoke] [--out F]
+
+Measures three things and emits ``BENCH_kvpool.json``:
+
+  * **Prefix hit latency** — restoring a cached shared prefix into a
+    fresh slot: the slab pool pays a fused device scatter of the whole
+    snapshot (O(prefix bytes)); the paged pool points the slot's block
+    table at the shared pages (O(metadata), refcount++).
+  * **Park/unpark latency** — the TOOL_WAIT release policy round trip:
+    slab = full-slot device gather + scatter; paged = page-reference
+    transfer (dense models: zero device work; hybrid would add one
+    small SSM point snapshot).
+  * **Max concurrent sessions at fixed arena bytes** — the capacity
+    unlock: a slab pool pins ``max_seq`` rows per session regardless of
+    its real length, so capacity is ``num_slots``; a paged pool with
+    the *same* positional arena bytes admits sessions until the page
+    allocator is exhausted — actual lengths plus one shared copy of the
+    common prefix.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.serving.kvcache import KVCachePool, PagedKVCachePool
+
+
+def _timeit(fn, reps: int) -> float:
+    fn()                                     # warm (compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    if out is not None:
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _paged_cfg(cfg, page_size):
+    return dataclasses.replace(cfg, name=f"{cfg.name}-paged",
+                               kv_layout="paged", kv_page_size=page_size)
+
+
+def _registered_pool(make, prefix_len):
+    pool = make()
+    src = pool.alloc()
+    toks = np.arange(prefix_len, dtype=np.int32)
+    if isinstance(pool, PagedKVCachePool):
+        pool.prepare_append(src, 0, prefix_len)
+    pool.lengths[src] = prefix_len
+    pool.register_prefix(src, toks)
+    return pool, pool.lookup(toks)
+
+
+# ---------------------------------------------------------------------------
+# prefix hit: snapshot scatter vs block-table surgery
+# ---------------------------------------------------------------------------
+
+def bench_prefix_hit(cfg, num_slots, max_seq, prefix_len, reps):
+    page = cfg.kv_page_size
+
+    def one(make, paged):
+        pool, entry = _registered_pool(make, prefix_len)
+
+        def hit():
+            d = pool.alloc()
+            pool.restore_prefix(d, entry)
+            pool.free(d)
+            return None if paged else jax.tree_util.tree_leaves(pool.cache)
+
+        t = _timeit(hit, reps)
+        return t, pool
+
+    t_slab, _ = one(lambda: KVCachePool(cfg, num_slots, max_seq), False)
+    t_paged, pp = one(
+        lambda: PagedKVCachePool(_paged_cfg(cfg, page), num_slots, max_seq),
+        True)
+    assert pp.stats["page_copies"] == 0      # the zero-copy claim, measured
+    out = {"prefix_len": prefix_len,
+           "slab_snapshot_copy_us": t_slab * 1e6,
+           "paged_zero_copy_us": t_paged * 1e6,
+           "speedup": t_slab / t_paged}
+    print(f"prefix hit  len={prefix_len}  slab={t_slab*1e6:8.0f}us  "
+          f"paged={t_paged*1e6:8.2f}us  ({out['speedup']:.0f}x)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# park/unpark round trip
+# ---------------------------------------------------------------------------
+
+def bench_park_unpark(cfg, num_slots, max_seq, sess_len, reps):
+    page = cfg.kv_page_size
+
+    def one(make, paged):
+        pool = make()
+        s = pool.alloc()
+        if paged:
+            pool.prepare_append(s, 0, sess_len)
+        pool.lengths[s] = sess_len
+        slot = {"s": s}
+
+        def round_trip():
+            entry = pool.park(slot["s"])
+            slot["s"] = pool.alloc()
+            pool.unpark(slot["s"], entry)
+            return None if paged else jax.tree_util.tree_leaves(pool.cache)
+
+        return _timeit(round_trip, reps), pool
+
+    t_slab, _ = one(lambda: KVCachePool(cfg, num_slots, max_seq), False)
+    t_paged, pp = one(
+        lambda: PagedKVCachePool(_paged_cfg(cfg, page), num_slots, max_seq),
+        True)
+    assert pp.stats["page_copies"] == 0
+    out = {"session_len": sess_len,
+           "slab_roundtrip_us": t_slab * 1e6,
+           "paged_roundtrip_us": t_paged * 1e6,
+           "speedup": t_slab / t_paged}
+    print(f"park/unpark len={sess_len}  slab={t_slab*1e6:8.0f}us  "
+          f"paged={t_paged*1e6:8.2f}us  ({out['speedup']:.0f}x)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# max concurrent sessions at fixed arena bytes
+# ---------------------------------------------------------------------------
+
+def bench_capacity(cfg, num_slots, max_seq, sess_len, prefix_len):
+    """Same positional arena bytes for both layouts (= ``num_slots``
+    full-length stripes).  Sessions have real length ``sess_len`` and
+    share a ``prefix_len`` system prompt."""
+    page = cfg.kv_page_size
+    pcfg = _paged_cfg(cfg, page)
+    num_pages = num_slots * (max_seq // page)
+    # slot registry sized well past the page budget: the experiment
+    # measures the *memory* bound, not the slot bound
+    slot_cap = num_pages + 1
+    pool = PagedKVCachePool(pcfg, slot_cap, max_seq, num_pages=num_pages)
+    arena = pool.arena_bytes()
+
+    toks = np.arange(prefix_len, dtype=np.int32)
+    admitted = 0
+    entry = None
+    try:
+        while True:
+            s = pool.alloc()
+            if entry is None:
+                pool.prepare_append(s, 0, prefix_len)
+                pool.lengths[s] = prefix_len
+                pool.register_prefix(s, toks)
+                entry = pool.lookup(toks)
+            else:
+                pool.restore_prefix(s, entry)
+            pool.prepare_append(s, prefix_len, sess_len - prefix_len)
+            pool.lengths[s] = sess_len
+            admitted += 1
+    except RuntimeError:
+        pass                                  # page pool exhausted
+    out = {"arena_bytes": arena, "max_seq": max_seq, "page_size": page,
+           "session_len": sess_len, "shared_prefix_len": prefix_len,
+           "slab_sessions": num_slots, "paged_sessions": admitted,
+           "capacity_gain": admitted / num_slots}
+    print(f"capacity at {arena/1e6:.1f} MB arena: slab={num_slots} "
+          f"sessions, paged={admitted} sessions "
+          f"({out['capacity_gain']:.1f}x)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps (CI)")
+    ap.add_argument("--reps", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_kvpool.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        num_slots, max_seq, page = 4, 256, 32
+        prefix_len, sess_len = 64, 96
+        reps = args.reps or 5
+    else:
+        num_slots, max_seq, page = 8, 2048, 64
+        prefix_len, sess_len = 512, 768
+        reps = args.reps or 20
+
+    cfg = dataclasses.replace(get_smoke_config("smollm-360m"),
+                              kv_page_size=page)
+    print(f"model={cfg.name} backend={jax.default_backend()} "
+          f"max_seq={max_seq} page={page}")
+    report = {
+        "model": cfg.name,
+        "backend": jax.default_backend(),
+        "smoke": args.smoke,
+        "prefix_hit": bench_prefix_hit(cfg, num_slots, max_seq, prefix_len,
+                                       reps),
+        "park_unpark": bench_park_unpark(cfg, num_slots, max_seq, sess_len,
+                                         reps),
+        "capacity": bench_capacity(cfg, num_slots, max_seq, sess_len,
+                                   prefix_len),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

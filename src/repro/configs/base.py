@@ -91,6 +91,17 @@ class ModelConfig:
     # chunk); "pallas" = the cache-aware Pallas kernel with scalar-
     # prefetched length/offset tile pruning (interpret-mode on CPU).
     prefill_kernel: str = "xla"
+    # Serving decode attention path under the paged layout: "xla" =
+    # gather pages then run the blocked reference; "pallas" = the
+    # block-table flash-decode kernel (DESIGN.md §8).
+    decode_kernel: str = "xla"
+    # Serving KV-cache layout (DESIGN.md §8): "slab" = per-slot
+    # contiguous [num_slots, max_seq] stripes (reference / parity
+    # oracle); "paged" = flat page arena [num_pages, page_size] with
+    # per-session block tables, refcounted page sharing and COW.
+    kv_layout: str = "slab"
+    kv_page_size: int = 64       # paged layout: tokens per page (= the
+    #                              kernels' block_k tile)
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     act: str = "swiglu"          # swiglu | gelu

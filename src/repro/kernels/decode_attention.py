@@ -71,6 +71,65 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
+def _decode_kernel_paged(len_ref, bt_ref, *args, **kw):
+    """Paged variant: the block table is consumed by the BlockSpec index
+    maps only — the kernel body is identical because tile positions are
+    *logical* (``ik * block_k``) regardless of which physical page the
+    pipeline fetched."""
+    _decode_kernel(len_ref, *args, **kw)
+
+
+def flash_decode_paged_bhgd(
+    q, k_arena, v_arena, lengths, block_tables, *, interpret: bool = False,
+):
+    """Block-table flash decode over a paged KV arena (DESIGN.md §8).
+
+    q: [B, Hk, G, hd]; arenas: [Hk, P_phys, page, hd]; lengths: [B];
+    block_tables: [B, P_max] int32 physical page ids (entries beyond a
+    session's valid length may point anywhere mapped — they are never
+    fetched).  ``block_k`` is the page size.  The k-tile grid index maps
+    through the scalar-prefetched table: logical tile ``ik`` fetches
+    physical page ``bt[b, min(ik, nvalid-1)]``, and fully-out-of-range
+    tiles revisit the last in-range page so the pipeline elides their
+    DMA — the same O(length) bytes bound as the slab kernel, now with
+    zero-copy page sharing between sessions."""
+    B, Hk, G, hd = q.shape
+    ps = k_arena.shape[2]
+    nk = block_tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _decode_kernel_paged, block_k=ps, num_kv_blocks=nk, scale=scale)
+
+    def kv_index(b, h, ik, lens, bt):
+        nvalid = jnp.maximum((lens[b] + ps - 1) // ps, 1)
+        return (h, bt[b, jnp.minimum(ik, nvalid - 1)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, ik, lens, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd), kv_index),
+            pl.BlockSpec((1, 1, ps, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ik, lens, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, q, k_arena, v_arena)
+
+
 def flash_decode_bhgd(
     q, k_cache, v_cache, lengths, *, block_k: int = 2048,
     interpret: bool = False,

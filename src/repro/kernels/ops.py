@@ -13,9 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.decode_attention import flash_decode_bhgd
+from repro.kernels.decode_attention import (flash_decode_bhgd,
+                                            flash_decode_paged_bhgd)
 from repro.kernels.moe_gmm import gmm_bcd
 from repro.kernels.prefill_attention import (flash_prefill_bhsd,
+                                             flash_prefill_paged_bhsd,
+                                             flash_prefill_paged_quant_bhsd,
                                              flash_prefill_quant_bhsd)
 from repro.kernels.ssd_scan import ssd_scan_bhsd
 
@@ -71,6 +74,26 @@ def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 2048,
     return out.reshape(B, 1, H, hd)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q, k_arena, v_arena, lengths, block_tables, *,
+                       interpret: bool | None = None):
+    """Paged flash decode. q: [B, 1, H, hd]; arenas:
+    [P_phys, page, Hk, hd]; lengths: [B]; block_tables: [B, P_max]
+    physical page ids -> [B, 1, H, hd].  block_k = the page size."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, _, H, hd = q.shape
+    Hk = k_arena.shape[2]
+    G = H // Hk
+    qg = q[:, 0].reshape(B, Hk, G, hd)
+    kt = k_arena.transpose(2, 0, 1, 3)          # [Hk, P_phys, page, hd]
+    vt = v_arena.transpose(2, 0, 1, 3)
+    out = flash_decode_paged_bhgd(qg, kt, vt, lengths.astype(jnp.int32),
+                                  block_tables.astype(jnp.int32),
+                                  interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
 def _prefill_blocks(Sq: int, block_q: int) -> int:
     """Query-tile size: capped at the (8-aligned) chunk length so short
     serving chunks are not padded up to a full 128-row tile."""
@@ -118,6 +141,48 @@ def flash_prefill_quant(q, k_q, k_s, v_q, v_s, q_offset, lengths, *,
         qt, tr(k_q), tr(k_s), tr(v_q), tr(v_s), q_offset.astype(jnp.int32),
         lengths.astype(jnp.int32), causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "interpret"))
+def flash_prefill_paged(q, k_arena, v_arena, q_offset, lengths, block_tables,
+                        *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, interpret: bool | None = None):
+    """Paged chunk prefill. q: [B, Sq, H, hd]; arenas:
+    [P_phys, page, Hk, hd]; block_tables: [B, P_max] -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    block_q = _prefill_blocks(Sq, block_q)
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)
+    kt = k_arena.transpose(2, 0, 1, 3)
+    vt = v_arena.transpose(2, 0, 1, 3)
+    out = flash_prefill_paged_bhsd(
+        qt, kt, vt, q_offset.astype(jnp.int32), lengths.astype(jnp.int32),
+        block_tables.astype(jnp.int32), causal=causal, window=window,
+        block_q=block_q, interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "interpret"))
+def flash_prefill_paged_quant(q, k_q, k_s, v_q, v_s, q_offset, lengths,
+                              block_tables, *, causal: bool = True,
+                              window: int = 0, block_q: int = 128,
+                              interpret: bool | None = None):
+    """int8-KV paged chunk prefill: value arenas [P_phys, page, Hk, hd]
+    + scale arenas [P_phys, page, Hk, 1] -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    block_q = _prefill_blocks(Sq, block_q)
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)
+    tr = lambda x: x.transpose(2, 0, 1, 3)
+    out = flash_prefill_paged_quant_bhsd(
+        qt, tr(k_q), tr(k_s), tr(v_q), tr(v_s), q_offset.astype(jnp.int32),
+        lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+        causal=causal, window=window, block_q=block_q, interpret=interpret)
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
 
 

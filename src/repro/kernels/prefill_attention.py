@@ -140,16 +140,42 @@ def _prefill_kernel_quant(qoff_ref, len_ref, q_ref, k_ref, ks_ref,
                    m_scr, l_scr, acc_scr, **kw)
 
 
+def _prefill_kernel_paged(qoff_ref, len_ref, bt_ref, *args, **kw):
+    """Paged variant: the block table only feeds the BlockSpec index
+    maps — the body is layout-blind (tile positions are logical)."""
+    _prefill_kernel(qoff_ref, len_ref, *args, **kw)
+
+
+def _prefill_kernel_paged_quant(qoff_ref, len_ref, bt_ref, *args, **kw):
+    _prefill_kernel_quant(qoff_ref, len_ref, *args, **kw)
+
+
 def _build(q, kv_leaves, q_offset, lengths, kernel, *, causal: bool,
-           window: int, block_q: int, block_k: int, interpret: bool):
+           window: int, block_q: int, block_k: int, interpret: bool,
+           block_tables=None):
     """Shared pallas_call assembly for the plain and quantised variants.
-    kv_leaves: list of (array [B, Hk, Sk, lastdim]) streamed with the
-    same pruned index map."""
+
+    Slab layout (``block_tables=None``): kv_leaves are
+    [B, Hk, Sk, lastdim] and tile ``ik`` fetches cache rows
+    ``ik*block_k``.  Paged layout: kv_leaves are page arenas
+    [Hk, P_phys, page, lastdim] with ``block_k`` = the page size, and
+    the k-tile grid index maps through the scalar-prefetched block
+    table — logical tile ``lt`` fetches physical page ``bt[b, lt]``.
+    Both layouts share the same pruning bounds and kernel body (tile
+    positions are logical either way)."""
     B, H, Sq, hd = q.shape
-    Hk, Sk = kv_leaves[0].shape[1], kv_leaves[0].shape[2]
+    paged = block_tables is not None
+    if paged:
+        Hk, ps = kv_leaves[0].shape[0], kv_leaves[0].shape[2]
+        assert ps == block_k, (ps, block_k)
+        nk = block_tables.shape[1]
+    else:
+        Hk, Sk = kv_leaves[0].shape[1], kv_leaves[0].shape[2]
+        assert Sk % block_k == 0
+        nk = Sk // block_k
     group = H // Hk
-    assert Sq % block_q == 0 and Sk % block_k == 0
-    nq, nk = Sq // block_q, Sk // block_k
+    assert Sq % block_q == 0
+    nq = Sq // block_q
     scale = 1.0 / (hd ** 0.5)
     bounds = functools.partial(_tile_bounds, block_q=block_q,
                                block_k=block_k, causal=causal, window=window)
@@ -161,16 +187,29 @@ def _build(q, kv_leaves, q_offset, lengths, kernel, *, causal: bool,
         first, last = bounds(qoff, lens, b, iq)
         return (b, h // group, jnp.minimum(first + ik, last), 0)
 
-    q_spec = pl.BlockSpec((1, 1, block_q, hd),
-                          lambda b, h, iq, ik, qoff, lens: (b, h, iq, 0))
-    kv_specs = [pl.BlockSpec((1, 1, block_k, leaf.shape[3]), kv_index)
+    def kv_index_paged(b, h, iq, ik, qoff, lens, bt):
+        # Same logical pruning; the physical page comes from the block
+        # table, so revisiting a logical tile revisits the same physical
+        # page and the DMA-elision property is preserved.
+        first, last = bounds(qoff, lens, b, iq)
+        return (h // group, bt[b, jnp.minimum(first + ik, last)], 0, 0)
+
+    if paged:
+        q_idx = lambda b, h, iq, ik, qoff, lens, bt: (b, h, iq, 0)
+        kv_idx = kv_index_paged
+        n_prefetch, scalars = 3, (q_offset, lengths, block_tables)
+    else:
+        q_idx = lambda b, h, iq, ik, qoff, lens: (b, h, iq, 0)
+        kv_idx = kv_index
+        n_prefetch, scalars = 2, (q_offset, lengths)
+    q_spec = pl.BlockSpec((1, 1, block_q, hd), q_idx)
+    kv_specs = [pl.BlockSpec((1, 1, block_k, leaf.shape[3]), kv_idx)
                 for leaf in kv_leaves]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_prefetch,
         grid=(B, H, nq, nk),
         in_specs=[q_spec] + kv_specs,
-        out_specs=pl.BlockSpec((1, 1, block_q, hd),
-                               lambda b, h, iq, ik, qoff, lens: (b, h, iq, 0)),
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), q_idx),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -185,7 +224,7 @@ def _build(q, kv_leaves, q_offset, lengths, kernel, *, causal: bool,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
         interpret=interpret,
-    )(q_offset, lengths, q, *kv_leaves)
+    )(*scalars, q, *kv_leaves)
 
 
 def flash_prefill_bhsd(q, k, v, q_offset, lengths, *, causal: bool = True,
@@ -207,3 +246,32 @@ def flash_prefill_quant_bhsd(q, k_q, k_s, v_q, v_s, q_offset, lengths, *,
     return _build(q, [k_q, k_s, v_q, v_s], q_offset, lengths,
                   _prefill_kernel_quant, causal=causal, window=window,
                   block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def flash_prefill_paged_bhsd(q, k_arena, v_arena, q_offset, lengths,
+                             block_tables, *, causal: bool = True,
+                             window: int = 0, block_q: int = 128,
+                             interpret: bool = False):
+    """Paged-layout chunk prefill: q [B, H, Sq, hd]; arenas
+    [Hk, P_phys, page, hd]; block_tables [B, P_max] physical page ids
+    (block_k = the page size).  Same pruning bounds as the slab kernel;
+    the physical fetch goes through the table."""
+    ps = k_arena.shape[2]
+    return _build(q, [k_arena, v_arena], q_offset, lengths,
+                  _prefill_kernel_paged, causal=causal, window=window,
+                  block_q=block_q, block_k=ps, interpret=interpret,
+                  block_tables=block_tables)
+
+
+def flash_prefill_paged_quant_bhsd(q, k_q, k_s, v_q, v_s, q_offset, lengths,
+                                   block_tables, *, causal: bool = True,
+                                   window: int = 0, block_q: int = 128,
+                                   interpret: bool = False):
+    """int8 paged variant: value arenas [Hk, P_phys, page, hd] + scale
+    arenas [Hk, P_phys, page, 1], all streamed through the same
+    block-table index map."""
+    ps = k_q.shape[2]
+    return _build(q, [k_q, k_s, v_q, v_s], q_offset, lengths,
+                  _prefill_kernel_paged_quant, causal=causal, window=window,
+                  block_q=block_q, block_k=ps, interpret=interpret,
+                  block_tables=block_tables)

@@ -220,6 +220,9 @@ def _build_engine(args, *, max_wall_s: float = 300.0,
     """One engine construction for both the closed-loop and online
     paths — they must not silently diverge in shapes/budget."""
     cfg = get_smoke_config(args.arch)
+    if getattr(args, "kv_layout", "slab") != "slab":
+        cfg = dataclasses.replace(cfg, kv_layout=args.kv_layout,
+                                  kv_page_size=args.kv_page_size)
     params = init_params(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(num_slots=max(args.agents + 2, 6), max_seq=1024,
                         cycle_budget=160, granularity=16,
@@ -356,6 +359,11 @@ def main(argv=None) -> int:
                     choices=["reject", "queue"])
     ap.add_argument("--tool-policy", default="hold",
                     choices=["hold", "release"])
+    ap.add_argument("--kv-layout", default="slab",
+                    choices=["slab", "paged"],
+                    help="KV cache layout (DESIGN.md §8): paged enables "
+                         "zero-copy prefix sharing and park/unpark")
+    ap.add_argument("--kv-page-size", type=int, default=64)
     args = ap.parse_args(argv)
 
     if args.serve_smoke:

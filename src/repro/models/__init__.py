@@ -2,4 +2,4 @@ from repro.models.model import (  # noqa: F401
     POSITIONAL_CACHE_KEYS, cache_shape, forward_cold, forward_decode,
     forward_decode_fused, forward_decode_megastep, forward_prefill,
     forward_resume_batch, forward_train, group_layout, init_cache,
-    init_params, merge_decode_cache, params_shape)
+    init_params, merge_decode_cache, num_kv_pages, params_shape)

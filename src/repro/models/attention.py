@@ -286,6 +286,76 @@ def prefill_attention_quant(q, k_q, k_s, v_q, v_s, *, q_offset, lengths,
                                    window=window, block_size=block_size)
 
 
+def paged_gather(arena, block_tables):
+    """Linearise a page arena through block tables: arena
+    [P_phys, page, Hk, x], block_tables [B, P_max] (physical page ids;
+    unallocated entries already point at the scratch page) ->
+    [B, P_max * page, Hk, x].  Positions >= the session's valid length
+    land on scratch/stale pages — exactly like the slab layout's
+    never-written rows, and masked identically by ``lengths``."""
+    g = jnp.take(arena, block_tables, axis=0)
+    B, pm, ps = g.shape[:3]
+    return g.reshape((B, pm * ps) + g.shape[3:])
+
+
+def prefill_attention_paged(q, k_arena, v_arena, block_tables, *, q_offset,
+                            lengths, window: int = 0, block_size: int = 512,
+                            backend: str = "xla"):
+    """Paged-layout serving prefill attention (DESIGN.md §8): the
+    "xla" backend gathers the session's pages into a linear view and
+    runs the reference scan (bit-identical to the slab path at valid
+    positions); "pallas" streams pages directly via block-table index
+    maps — no gather materialised."""
+    if backend == "pallas":
+        from repro.kernels.ops import flash_prefill_paged
+        return flash_prefill_paged(q, k_arena, v_arena, q_offset, lengths,
+                                   block_tables, causal=True, window=window)
+    return blocked_attention(
+        q, paged_gather(k_arena, block_tables),
+        paged_gather(v_arena, block_tables), q_offset=q_offset,
+        lengths=lengths, causal=True, window=window, block_size=block_size)
+
+
+def prefill_attention_paged_quant(q, k_arena, ks_arena, v_arena, vs_arena,
+                                  block_tables, *, q_offset, lengths,
+                                  window: int = 0, block_size: int = 512,
+                                  backend: str = "xla"):
+    """int8-KV paged prefill attention; same dispatch contract as
+    ``prefill_attention_paged`` (scale leaves ride the same tables)."""
+    if backend == "pallas":
+        from repro.kernels.ops import flash_prefill_paged_quant
+        return flash_prefill_paged_quant(
+            q, k_arena, ks_arena, v_arena, vs_arena, q_offset, lengths,
+            block_tables, causal=True, window=window)
+    bt = block_tables
+    return blocked_attention_quant(
+        q, paged_gather(k_arena, bt), paged_gather(ks_arena, bt),
+        paged_gather(v_arena, bt), paged_gather(vs_arena, bt),
+        q_offset=q_offset, lengths=lengths, causal=True, window=window,
+        block_size=block_size)
+
+
+def decode_attention_paged(q, k_arena, v_arena, block_tables, lengths, *,
+                           window: int = 0, block_size: int = 2048,
+                           k_scale=None, v_scale=None, backend: str = "xla"):
+    """Paged-layout single-token decode.  "pallas" (full-attention,
+    non-quant) maps the kernel's k-tile grid index through the
+    scalar-prefetched block table; otherwise pages are gathered and the
+    reference ``decode_attention`` runs on the linear view (identical
+    numerics — the gather is position-preserving)."""
+    if backend == "pallas" and window == 0 and k_scale is None:
+        from repro.kernels.ops import flash_decode_paged
+        return flash_decode_paged(q, k_arena, v_arena, lengths, block_tables)
+    scales = {}
+    if k_scale is not None:
+        scales = dict(k_scale=paged_gather(k_scale, block_tables),
+                      v_scale=paged_gather(v_scale, block_tables))
+    return decode_attention(
+        q, paged_gather(k_arena, block_tables),
+        paged_gather(v_arena, block_tables), lengths, window=window,
+        block_size=block_size, **scales)
+
+
 def quantize_kv(x):
     """x: [..., hd] bf16 -> (int8 values, per-(...) scale [..., 1])."""
     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0

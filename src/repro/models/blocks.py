@@ -16,8 +16,9 @@ from repro.configs.base import ModelConfig
 from repro.models import mamba2
 from repro.models.attention import (
     bidirectional_attention, blocked_attention, decode_attention,
-    decode_attention_seqpar, prefill_attention, prefill_attention_quant,
-    quantize_kv)
+    decode_attention_paged, decode_attention_seqpar, prefill_attention,
+    prefill_attention_paged, prefill_attention_paged_quant,
+    prefill_attention_quant, quantize_kv)
 from repro.models.common import dense_init, rms_norm, split_keys
 from repro.models.mlp import apply_mlp, init_mlp
 from repro.models.moe import apply_moe, init_moe
@@ -112,6 +113,48 @@ def _write_kv(cache_k, cache_v, k_new, v_new, offsets):
             jax.vmap(upd)(cache_v, v_new, offsets))
 
 
+def _paged_write(arena, rows, block_tables, positions):
+    """Scatter new rows into the flat page arena through a block table.
+
+    arena: [P_phys, page, Hk, x]; rows: [B, S, Hk, x]; block_tables:
+    [B, P_max] physical page ids (unallocated entries already point at
+    the scratch page); positions: [B, S] absolute token positions.
+    Negative or beyond-table positions redirect to the scratch (last
+    physical) page, which is never read — the paged analogue of the
+    slab scratch row (DESIGN.md §3/§8).  Distinct sessions own distinct
+    pages, so in-range scatter indices never collide."""
+    P, ps = arena.shape[0], arena.shape[1]
+    p_max = block_tables.shape[1]
+    pos = jnp.maximum(positions, 0)
+    logical = pos // ps
+    page = jnp.take_along_axis(block_tables,
+                               jnp.minimum(logical, p_max - 1), axis=1)
+    oob = (positions < 0) | (logical >= p_max)
+    page = jnp.where(oob, P - 1, page)
+    flat = page * ps + pos % ps                          # [B, S]
+    flat_arena = arena.reshape((P * ps,) + arena.shape[2:])
+    flat_arena = flat_arena.at[flat.reshape(-1)].set(
+        rows.reshape((-1,) + rows.shape[2:]))
+    return flat_arena.reshape(arena.shape)
+
+
+def _paged_write_quant(layer_cache, k_new, v_new, block_tables, positions):
+    """Quantise new K/V tokens and scatter values + scales through the
+    block table (int8 paged arena)."""
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    return {
+        "k": _paged_write(layer_cache["k"], kq, block_tables, positions),
+        "v": _paged_write(layer_cache["v"], vq, block_tables, positions),
+        "ks": _paged_write(layer_cache["ks"],
+                           ks.astype(layer_cache["ks"].dtype),
+                           block_tables, positions),
+        "vs": _paged_write(layer_cache["vs"],
+                           vs.astype(layer_cache["vs"].dtype),
+                           block_tables, positions),
+    }
+
+
 def _write_kv_quant(layer_cache, k_new, v_new, offsets):
     """Quantise new K/V tokens and write values + scales (int8 cache)."""
     def upd(c, x, o):
@@ -131,12 +174,19 @@ def _write_kv_quant(layer_cache, k_new, v_new, offsets):
 def apply_attn_mixer(
     p, x, cfg: ModelConfig, *, mode: str, positions, lengths,
     layer_cache: Optional[Dict[str, jax.Array]], window: int,
-    block_size: int = 512, seq_parallel=None,
+    block_size: int = 512, seq_parallel=None, block_tables=None,
+    write_positions=None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """x: [B, S, d].  ``lengths`` [B]: valid tokens in cache *before* this
-    call (0 for cold prefill / train).  Returns (out, new_layer_cache)."""
+    call (0 for cold prefill / train).  ``block_tables`` [B, P_max]
+    switches the cache to the paged layout (leaves are page arenas);
+    ``write_positions`` [B] (decode only) decouples the K/V write
+    position from the attention valid-length — negative means the
+    scratch page/row.  Returns (out, new_layer_cache)."""
     B, S, _ = x.shape
     q, k, v = _qkv(p, x, cfg)
+    if block_tables is not None:
+        assert seq_parallel is None, "paged KV + seq-parallel unsupported"
 
     if mode == "encode":
         q, k = _rope(cfg, q, k, positions)
@@ -146,6 +196,29 @@ def apply_attn_mixer(
         q, k = _rope(cfg, q, k, positions)
         out = blocked_attention(q, k, v, causal=True, window=window,
                                 block_size=block_size)
+    elif mode == "prefill" and block_tables is not None \
+            and layer_cache is not None:
+        # paged layout: chunk rows scatter into the page arena through
+        # the block table; attention reads the arena via the same table
+        # (gather for the XLA reference, index maps for Pallas).
+        q, k = _rope(cfg, q, k, positions)
+        pos_w = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if "ks" in layer_cache:
+            layer_cache = _paged_write_quant(layer_cache, k, v,
+                                             block_tables, pos_w)
+            out = prefill_attention_paged_quant(
+                q, layer_cache["k"], layer_cache["ks"],
+                layer_cache["v"], layer_cache["vs"], block_tables,
+                q_offset=lengths, lengths=lengths + S, window=window,
+                block_size=block_size, backend=cfg.prefill_kernel)
+        else:
+            ck = _paged_write(layer_cache["k"], k, block_tables, pos_w)
+            cv = _paged_write(layer_cache["v"], v, block_tables, pos_w)
+            layer_cache = {"k": ck, "v": cv}
+            out = prefill_attention_paged(
+                q, ck, cv, block_tables, q_offset=lengths,
+                lengths=lengths + S, window=window, block_size=block_size,
+                backend=cfg.prefill_kernel)
     elif mode == "prefill":
         q, k = _rope(cfg, q, k, positions)
         if layer_cache is not None and "ks" in layer_cache:
@@ -167,6 +240,26 @@ def apply_attn_mixer(
         else:  # cold prefill without a persistent cache (train-like)
             out = blocked_attention(q, k, v, causal=True, window=window,
                                     block_size=block_size)
+    elif mode == "decode" and block_tables is not None:
+        assert layer_cache is not None and S == 1
+        q, k = _rope(cfg, q, k, positions)
+        wpos = lengths if write_positions is None else write_positions
+        pos_w = wpos[:, None]
+        if "ks" in layer_cache:
+            layer_cache = _paged_write_quant(layer_cache, k, v,
+                                             block_tables, pos_w)
+            out = decode_attention_paged(
+                q, layer_cache["k"], layer_cache["v"], block_tables,
+                lengths + 1, window=window, block_size=block_size,
+                k_scale=layer_cache["ks"], v_scale=layer_cache["vs"],
+                backend=cfg.decode_kernel)
+        else:
+            ck = _paged_write(layer_cache["k"], k, block_tables, pos_w)
+            cv = _paged_write(layer_cache["v"], v, block_tables, pos_w)
+            layer_cache = {"k": ck, "v": cv}
+            out = decode_attention_paged(
+                q, ck, cv, block_tables, lengths + 1, window=window,
+                block_size=block_size, backend=cfg.decode_kernel)
     elif mode == "decode":
         assert layer_cache is not None and S == 1
         q, k = _rope(cfg, q, k, positions)
@@ -189,14 +282,19 @@ def apply_attn_mixer(
                     lengths + 1, seq_parallel, window=window)
                 layer_cache = {"k": ck, "v": cv}
         else:
+            # write position decoupled from attention valid-length
+            # (DESIGN.md §3): the fused path redirects inactive lanes'
+            # writes to the scratch row while their attention extent
+            # stays O(real length)
+            wpos = lengths if write_positions is None else write_positions
             if quantized:
-                layer_cache = _write_kv_quant(layer_cache, k, v, lengths)
+                layer_cache = _write_kv_quant(layer_cache, k, v, wpos)
                 ck, cv = layer_cache["k"], layer_cache["v"]
                 scales = dict(k_scale=layer_cache["ks"],
                               v_scale=layer_cache["vs"])
             else:
                 ck, cv = _write_kv(layer_cache["k"], layer_cache["v"], k, v,
-                                   lengths)
+                                   wpos)
                 layer_cache = {"k": ck, "v": cv}
                 scales = {}
             out = decode_attention(q, ck, cv, lengths + 1, window=window,
@@ -212,6 +310,7 @@ def apply_layer(
     lp, x, cfg: ModelConfig, spec: LayerSpec, *, mode: str, positions,
     lengths, layer_cache, window: int, moe_mode: str, block_size: int = 512,
     moe_capacity: float = 1.25, moe_shards: int = 1, seq_parallel=None,
+    block_tables=None, write_positions=None, ssm_valid=None,
 ):
     """Pre-norm residual block. Returns (x, new_layer_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -220,13 +319,15 @@ def apply_layer(
         mixed, layer_cache = apply_attn_mixer(
             lp["attn"], h, cfg, mode=mode, positions=positions,
             lengths=lengths, layer_cache=layer_cache, window=window,
-            block_size=block_size, seq_parallel=seq_parallel)
+            block_size=block_size, seq_parallel=seq_parallel,
+            block_tables=block_tables, write_positions=write_positions)
     else:
         state = mamba2.SSMState(**layer_cache)
         if mode == "decode":
             mixed, state = mamba2.apply_mamba2_step(lp["ssm"], h, state, cfg.ssm)
         else:
-            mixed, state = mamba2.apply_mamba2_scan(lp["ssm"], h, state, cfg.ssm)
+            mixed, state = mamba2.apply_mamba2_scan(lp["ssm"], h, state,
+                                                    cfg.ssm, valid=ssm_valid)
         layer_cache = state._asdict()
     x = x + mixed
     if spec.ffn != "none":

@@ -76,11 +76,23 @@ def init_ssm_state(batch: int, d_model: int, ssm: SSMConfig, dtype) -> SSMState:
     )
 
 
-def _causal_conv(seq, conv_state, w, b):
-    """seq: [B, S, ch]; conv_state: [B, d_conv-1, ch] (history)."""
+def _causal_conv(seq, conv_state, w, b, valid=None):
+    """seq: [B, S, ch]; conv_state: [B, d_conv-1, ch] (history).
+
+    ``valid`` [B]: number of real tokens per row (the rest of ``seq``
+    is executable-shape padding).  The carried-out state must then be
+    the last ``d_conv-1`` inputs *at the valid frontier* — taking the
+    tail of the padded sequence would seed the next chunk's conv with
+    pad garbage."""
     d_conv = w.shape[0]
     full = jnp.concatenate([conv_state, seq], axis=1)
-    new_state = full[:, full.shape[1] - (d_conv - 1):, :]
+    if valid is None:
+        new_state = full[:, full.shape[1] - (d_conv - 1):, :]
+    else:
+        # valid inputs occupy full[:, d_conv-1 : d_conv-1+valid); the
+        # last d_conv-1 of them sit at [valid, valid + d_conv - 1)
+        idx = valid[:, None] + jnp.arange(d_conv - 1, dtype=jnp.int32)
+        new_state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
     # depthwise causal conv: y_t = sum_j w_j * x_{t-d_conv+1+j}
     S = seq.shape[1]
     out = sum(
@@ -100,9 +112,19 @@ def _split_proj(params, u):
 
 
 def apply_mamba2_scan(
-    params, u, state: SSMState, ssm: SSMConfig,
+    params, u, state: SSMState, ssm: SSMConfig, valid=None,
 ) -> Tuple[jax.Array, SSMState]:
-    """Chunked SSD over a sequence. u: [B, S, d_model] -> (y, new_state)."""
+    """Chunked SSD over a sequence. u: [B, S, d_model] -> (y, new_state).
+
+    ``valid`` [B]: real tokens per row when ``u`` carries trailing
+    executable-shape padding (serving chunks are padded to warmed
+    shapes).  Padded positions must be state-identity: their
+    post-softplus ``dt`` is zeroed (a = exp(0·A) = 1, zero injection —
+    the same trick the internal chunk-size padding below already uses)
+    and the conv streams carry out the frontier window, so the carried
+    state is exactly the unpadded computation's.  Without this, pad
+    garbage advances the recurrent state and a session's tokens depend
+    on which executable shape its chunks were padded to."""
     B_, S, d_model = u.shape
     d_in = ssm.expand * d_model
     nh, hd, N = ssm.num_heads(d_model), ssm.head_dim, ssm.d_state
@@ -110,13 +132,16 @@ def apply_mamba2_scan(
 
     z, x, Bm, Cm, dt = _split_proj(params, u)
     x, new_cx = _causal_conv(x, state.conv_x, params["conv_x_w"],
-                             params["conv_x_b"])
+                             params["conv_x_b"], valid=valid)
     Bm, new_cb = _causal_conv(Bm, state.conv_B, params["conv_B_w"],
-                              params["conv_B_b"])
+                              params["conv_B_b"], valid=valid)
     Cm, new_cc = _causal_conv(Cm, state.conv_C, params["conv_C_w"],
-                              params["conv_C_b"])
+                              params["conv_C_b"], valid=valid)
 
     dt = jax.nn.softplus(dt + params["dt_bias"][None, None, :])  # [B,S,nh]
+    if valid is not None:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :, None]
+        dt = jnp.where(pos < valid[:, None, None], dt, 0.0)
     A = -jnp.exp(params["A_log"])                                # [nh]
     xh = x.reshape(B_, S, nh, hd).astype(jnp.float32)
     Bm = Bm.astype(jnp.float32)

@@ -75,15 +75,40 @@ def params_shape(cfg: ModelConfig, dtype=jnp.float32):
         lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
 
 
+def num_kv_pages(cfg: ModelConfig, batch: int, max_seq: int) -> int:
+    """Default usable page count for the paged layout: capacity parity
+    with the slab layout (``batch`` full-length stripes)."""
+    return batch * (-(-max_seq // cfg.kv_page_size))
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=jnp.float32, kv_quant: bool = False) -> Dict[str, Any]:
+               dtype=jnp.float32, kv_quant: bool = False,
+               num_pages: int = 0) -> Dict[str, Any]:
     """Decode/serving cache for one model: stacked over groups.
-    ``kv_quant``: int8 values + per-(position, head) scales (§Perf)."""
+    ``kv_quant``: int8 values + per-(position, head) scales (§Perf).
+
+    With ``cfg.kv_layout == "paged"`` the *positional* leaves (attention
+    K/V and quant scales) become a flat page arena
+    ``[G, num_pages + 1, page_size, Hk, hd]`` addressed through
+    per-session block tables (DESIGN.md §8); the extra last page is the
+    write scratch page (never read).  SSM/stateful leaves stay per-slot
+    point summaries — a recurrent state is a length-point snapshot, not
+    a positional row (the Marconi argument), so paging it would buy
+    nothing and break the COW sharing invariants."""
     G, gs, specs = group_layout(cfg)
+    paged = cfg.kv_layout == "paged"
+    if paged:
+        assert max_seq % cfg.kv_page_size == 0, (max_seq, cfg.kv_page_size)
+        if num_pages <= 0:
+            num_pages = num_kv_pages(cfg, batch, max_seq)
     cache: Dict[str, Any] = {}
     for j, spec in enumerate(specs):
         if spec.kind == "attn":
-            shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            if paged:
+                shape = (G, num_pages + 1, cfg.kv_page_size,
+                         cfg.num_kv_heads, cfg.head_dim)
+            else:
+                shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
             # k/v (and scale) leaves must be *distinct* buffers: donating
             # executables (fused decode, batched resume, fused prefix
             # restore) reject a pytree that donates one buffer twice
@@ -105,9 +130,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def cache_shape(cfg: ModelConfig, batch: int, max_seq: int,
-                dtype=jnp.float32, kv_quant: bool = False):
+                dtype=jnp.float32, kv_quant: bool = False,
+                num_pages: int = 0):
     return jax.eval_shape(
-        lambda: init_cache(cfg, batch, max_seq, dtype, kv_quant))
+        lambda: init_cache(cfg, batch, max_seq, dtype, kv_quant, num_pages))
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +153,8 @@ def _scan_groups(params, x, cfg: ModelConfig, *, mode: str, positions,
                  lengths, cache, window: int, moe_mode: str,
                  remat: bool = False, block_size: int = 512,
                  moe_capacity: float = 1.25, moe_shards: int = 1,
-                 seq_parallel=None):
+                 seq_parallel=None, block_tables=None,
+                 write_positions=None, ssm_valid=None):
     G, gs, specs = group_layout(cfg)
     from repro.distributed.context import current_spmd
     spmd = current_spmd()
@@ -154,7 +181,8 @@ def _scan_groups(params, x, cfg: ModelConfig, *, mode: str, positions,
                     positions=positions, lengths=lengths, layer_cache=lc_in,
                     window=window, moe_mode=moe_mode, block_size=block_size,
                     moe_capacity=moe_capacity, moe_shards=moe_shards,
-                    seq_parallel=seq_parallel)
+                    seq_parallel=seq_parallel, block_tables=block_tables,
+                    write_positions=write_positions, ssm_valid=ssm_valid)
 
             if remat and gs > 1:
                 # per-layer remat within the group body: without this, a
@@ -271,22 +299,29 @@ def forward_prefill(params, cfg: ModelConfig, tokens, cache, lengths, *,
                     embeds=None, moe_mode: str = "gmm",
                     window_override: Optional[int] = None,
                     block_size: int = 512, moe_capacity: float = 1.25,
-                    moe_shards: int = 1, logit_idx=None):
+                    moe_shards: int = 1, logit_idx=None, block_tables=None):
     """Process a chunk (cold or resume prefill), writing into ``cache``.
 
     tokens: [B, S] appended at per-batch offsets ``lengths`` [B].
     ``logit_idx`` [B]: position within the chunk whose logits to return
     (defaults to the last — engines pass the last *unpadded* position).
+    ``block_tables`` [B, P_max] selects the paged cache layout: chunk
+    rows scatter into the page arena through the table instead of into
+    per-slot stripes (DESIGN.md §8).
     Returns (logits [B, vocab], new_cache, new_lengths)."""
     x = _embed(params, cfg, tokens, embeds)
     B, S, _ = x.shape
     positions = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     window = cfg.sliding_window if window_override is None else window_override
+    # logit_idx marks the last real token per row, so it also fences the
+    # SSM state update against executable-shape padding (mamba2.py)
+    ssm_valid = None if logit_idx is None else logit_idx + 1
     h, aux, new_cache = _scan_groups(
         params, x, cfg, mode="prefill", positions=positions, lengths=lengths,
         cache=cache, window=window, moe_mode=moe_mode,
         block_size=block_size, moe_capacity=moe_capacity,
-        moe_shards=moe_shards)
+        moe_shards=moe_shards, block_tables=block_tables,
+        ssm_valid=ssm_valid)
     if logit_idx is None:
         h_last = h[:, -1:, :]
     else:
@@ -299,9 +334,16 @@ def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
                    moe_mode: str = "gmm",
                    window_override: Optional[int] = None,
                    moe_capacity: float = 1.25, moe_shards: int = 1,
-                   seq_parallel=None):
+                   seq_parallel=None, block_tables=None,
+                   write_positions=None):
     """One decode step. tokens: [B] (last sampled token per sequence).
 
+    ``write_positions`` [B] decouples where the new K/V row lands from
+    the attention valid-length: the fused hot path redirects *inactive*
+    lanes' writes to scratch while their attention extent stays
+    O(real length) — without it ``lengths`` would have to be pinned to
+    the scratch position for idle lanes (the DESIGN.md §3 follow-up).
+    Defaults to ``lengths`` (the seed behaviour).
     Returns (logits [B, vocab], new_cache, new_lengths)."""
     x = _embed(params, cfg, tokens[:, None])
     B = x.shape[0]
@@ -311,7 +353,8 @@ def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
         params, x, cfg, mode="decode", positions=positions, lengths=lengths,
         cache=cache, window=window, moe_mode=moe_mode,
         moe_capacity=moe_capacity, moe_shards=moe_shards,
-        seq_parallel=seq_parallel)
+        seq_parallel=seq_parallel, block_tables=block_tables,
+        write_positions=write_positions)
     logits = _logits(params, cfg, h[:, 0, :])
     return logits, new_cache, lengths + 1
 
@@ -363,7 +406,8 @@ def _scratch_write_lengths(cache, lengths, active):
 def forward_decode_fused(params, cfg: ModelConfig, tokens, cache, lengths,
                          active, *, moe_mode: str = "gmm",
                          window_override: Optional[int] = None,
-                         moe_capacity: float = 1.25, moe_shards: int = 1):
+                         moe_capacity: float = 1.25, moe_shards: int = 1,
+                         block_tables=None):
     """One decode step with greedy sampling, length increment and the
     active-lane cache merge folded in, so a serving engine can keep
     ``tokens``/``lengths``/``active`` as device arrays and never sync
@@ -372,12 +416,20 @@ def forward_decode_fused(params, cfg: ModelConfig, tokens, cache, lengths,
     tokens: [B] int32 (last token per lane; don't-care where inactive);
     active: [B] bool.  Returns (next_tokens [B], new_cache, new_lengths);
     inactive lanes keep their token and length unchanged, and their only
-    cache writes land in the scratch (last) sequence row."""
-    write_lengths = _scratch_write_lengths(cache, lengths, active)
+    cache writes land in the scratch row (slab) / scratch page (paged).
+    Attention valid-length stays the *real* ``lengths`` for every lane —
+    only the write position is redirected — so idle lanes cost O(real
+    length), not O(max_seq), under a tile-skipping kernel."""
+    if block_tables is not None:
+        # paged: a negative write position redirects to the scratch page
+        write_positions = jnp.where(active, lengths, -1)
+    else:
+        write_positions = _scratch_write_lengths(cache, lengths, active)
     logits, new_cache, _ = forward_decode(
-        params, cfg, tokens, cache, write_lengths, moe_mode=moe_mode,
+        params, cfg, tokens, cache, lengths, moe_mode=moe_mode,
         window_override=window_override, moe_capacity=moe_capacity,
-        moe_shards=moe_shards)
+        moe_shards=moe_shards, block_tables=block_tables,
+        write_positions=write_positions)
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     next_tokens = jnp.where(active, next_tokens, tokens)
     merged = merge_decode_cache(new_cache, cache, active)
@@ -388,9 +440,15 @@ def forward_decode_megastep(params, cfg: ModelConfig, tokens, cache,
                             lengths, active, *, num_steps: int,
                             moe_mode: str = "gmm",
                             window_override: Optional[int] = None,
-                            moe_capacity: float = 1.25, moe_shards: int = 1):
+                            moe_capacity: float = 1.25, moe_shards: int = 1,
+                            block_tables=None):
     """``num_steps`` fused decode iterations as one ``lax.scan``
     executable, amortising dispatch over K emitted tokens per lane.
+
+    Paged callers must have grown each active lane's block table to
+    cover ``lengths + num_steps`` before dispatch — the table is fixed
+    for the whole scan (``KVCachePool`` does this in
+    ``prepare_append``).
 
     Returns (tokens_seq [K, B], next_tokens [B], new_cache, new_lengths);
     ``tokens_seq[i]`` is the token emitted by step i (inactive lanes
@@ -400,7 +458,7 @@ def forward_decode_megastep(params, cfg: ModelConfig, tokens, cache,
         nt, nc, nl = forward_decode_fused(
             params, cfg, t, c, l, active, moe_mode=moe_mode,
             window_override=window_override, moe_capacity=moe_capacity,
-            moe_shards=moe_shards)
+            moe_shards=moe_shards, block_tables=block_tables)
         return (nt, nl, nc), nt
 
     (t, l, c), toks = jax.lax.scan(body, (tokens, lengths, cache), None,
@@ -412,14 +470,36 @@ def forward_resume_batch(params, cfg: ModelConfig, tokens, cache, slot_idx,
                          lengths, logit_idx, *, moe_mode: str = "gmm",
                          window_override: Optional[int] = None,
                          block_size: int = 512, moe_capacity: float = 1.25,
-                         moe_shards: int = 1):
+                         moe_shards: int = 1, block_tables=None):
     """Batched resume prefill: M jobs packed as one [M, bucket] chunk.
 
     tokens: [M, S]; slot_idx: [M] int32 (distinct cache slots);
     lengths: [M] (cached tokens per slot); logit_idx: [M] (last unpadded
     position per row).  Gathers the M slot rows out of the stacked
     cache, runs one batch-M prefill, and scatters the rows back.
+
+    Under the paged layout (``block_tables`` [B, P_max]) only the
+    *stateful* (SSM) leaves are gathered/scattered by slot — positional
+    leaves are the shared page arena, which the prefill addresses
+    directly through the M gathered block-table rows.
     Returns (logits [M, vocab], new_cache)."""
+    if block_tables is not None:
+        sub = {name: (layer if set(layer) <= POSITIONAL_CACHE_KEYS else
+                      {k: jnp.take(v, slot_idx, axis=1)
+                       for k, v in layer.items()})
+               for name, layer in cache.items()}
+        logits, sub2, _ = forward_prefill(
+            params, cfg, tokens, sub, lengths, moe_mode=moe_mode,
+            window_override=window_override, block_size=block_size,
+            moe_capacity=moe_capacity, moe_shards=moe_shards,
+            logit_idx=logit_idx,
+            block_tables=jnp.take(block_tables, slot_idx, axis=0))
+        new_cache = {
+            name: (sub2[name] if set(layer) <= POSITIONAL_CACHE_KEYS else
+                   {k: v.at[:, slot_idx].set(sub2[name][k])
+                    for k, v in layer.items()})
+            for name, layer in cache.items()}
+        return logits, new_cache
     sub = jax.tree.map(lambda leaf: jnp.take(leaf, slot_idx, axis=1), cache)
     logits, sub2, _ = forward_prefill(
         params, cfg, tokens, sub, lengths, moe_mode=moe_mode,

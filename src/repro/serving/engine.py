@@ -67,10 +67,10 @@ from repro.core.admission import AdmissionQueues, Job
 from repro.core.phases import Phase, PhaseThresholds, classify
 from repro.core.scheduler import SchedulerConfig, TPOTScheduler
 from repro.core.slots import SlotManager
-from repro.models import (forward_decode, forward_decode_fused,
-                          forward_decode_megastep, forward_prefill,
-                          forward_resume_batch)
-from repro.serving.kvcache import KVCachePool
+from repro.models import (POSITIONAL_CACHE_KEYS, forward_decode,
+                          forward_decode_fused, forward_decode_megastep,
+                          forward_prefill, forward_resume_batch)
+from repro.serving.kvcache import make_pool
 from repro.serving.metrics import ServingReport, SLOThresholds, build_report
 from repro.serving.policies import PolicySpec
 from repro.serving.reactor import TokenEvent
@@ -100,6 +100,10 @@ class EngineConfig:
     cold_batch_max: int = 4          # M cap for packed cold prefills
     autotune_chunks: bool = True     # measure chunk tok/s at slot warmup
     prefill_tile: int = 128          # kernel KV tile (telemetry estimate)
+    # --- paged KV pool (DESIGN.md §8) ---------------------------------
+    kv_pages: int = 0                # paged layout: usable page count
+    #                                  (0 = slab-capacity parity:
+    #                                  num_slots * max_seq / page_size)
     # --- online reactor (DESIGN.md §6) --------------------------------
     trace_max: int = 200_000         # per-cycle telemetry cap (long-run
     #                                  gateway processes must not grow
@@ -139,7 +143,18 @@ class HotPathExecutables:
 _EXEC_CACHE: Dict[Tuple, HotPathExecutables] = {}
 
 
+def _is_positional_layer(layer) -> bool:
+    return set(layer) <= POSITIONAL_CACHE_KEYS
+
+
 def _raw_fns(mcfg: ModelConfig, moe_mode: str):
+    """Hot-path step functions.  Under the paged layout every signature
+    gains a trailing ``bt`` ([B, P_max] block tables) and the per-slot
+    gather/scatter only touches *stateful* leaves — positional leaves
+    are the shared page arena, addressed through the tables."""
+    if mcfg.kv_layout == "paged":
+        return _raw_fns_paged(mcfg, moe_mode)
+
     def decode_step(params, cache, tokens, lengths):
         logits, new_cache, _ = forward_decode(
             params, mcfg, tokens, cache, lengths, moe_mode=moe_mode)
@@ -170,6 +185,48 @@ def _raw_fns(mcfg: ModelConfig, moe_mode: str):
     def resume_step(params, cache, tokens, slots, lengths, logit_idx):
         return forward_resume_batch(params, mcfg, tokens, cache, slots,
                                     lengths, logit_idx, moe_mode=moe_mode)
+
+    return decode_step, prefill_step, fused_step, mega_step, resume_step
+
+
+def _raw_fns_paged(mcfg: ModelConfig, moe_mode: str):
+    def decode_step(params, cache, tokens, lengths, bt):
+        logits, new_cache, _ = forward_decode(
+            params, mcfg, tokens, cache, lengths, moe_mode=moe_mode,
+            block_tables=bt)
+        return logits, new_cache
+
+    def prefill_step(params, cache, tokens, slot, length, logit_idx, bt):
+        sub = {name: (layer if _is_positional_layer(layer) else
+                      {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1)
+                       for k, v in layer.items()})
+               for name, layer in cache.items()}
+        logits, sub2, _ = forward_prefill(
+            params, mcfg, tokens, sub, length[None],
+            moe_mode=moe_mode, logit_idx=logit_idx[None],
+            block_tables=jax.lax.dynamic_slice_in_dim(bt, slot, 1, axis=0))
+        new_cache = {
+            name: (sub2[name] if _is_positional_layer(layer) else
+                   {k: jax.lax.dynamic_update_slice_in_dim(
+                       v, sub2[name][k], slot, axis=1)
+                    for k, v in layer.items()})
+            for name, layer in cache.items()}
+        return logits[0], new_cache
+
+    def fused_step(params, cache, tokens, lengths, active, bt):
+        return forward_decode_fused(params, mcfg, tokens, cache, lengths,
+                                    active, moe_mode=moe_mode,
+                                    block_tables=bt)
+
+    def mega_step(params, cache, tokens, lengths, active, bt, *, num_steps):
+        return forward_decode_megastep(
+            params, mcfg, tokens, cache, lengths, active,
+            num_steps=num_steps, moe_mode=moe_mode, block_tables=bt)
+
+    def resume_step(params, cache, tokens, slots, lengths, logit_idx, bt):
+        return forward_resume_batch(params, mcfg, tokens, cache, slots,
+                                    lengths, logit_idx, moe_mode=moe_mode,
+                                    block_tables=bt)
 
     return decode_step, prefill_step, fused_step, mega_step, resume_step
 
@@ -205,8 +262,10 @@ class ServingEngine:
         self.params = params
         self.policy = policy
         self.ecfg = engine_cfg or EngineConfig()
-        self.pool = KVCachePool(model_cfg, self.ecfg.num_slots,
-                                self.ecfg.max_seq, dtype)
+        self._paged = model_cfg.kv_layout == "paged"
+        self.pool = make_pool(model_cfg, self.ecfg.num_slots,
+                              self.ecfg.max_seq, dtype,
+                              num_pages=self.ecfg.kv_pages)
         C, g = self.ecfg.cycle_budget, self.ecfg.granularity
         self.scheduler = TPOTScheduler(SchedulerConfig(
             total_resources=C, r_base=g, r_init=2 * g, delta_r=g,
@@ -304,6 +363,19 @@ class ServingEngine:
         executables (the donated input is consumed by the call)."""
         return jax.tree.map(jnp.copy, self.pool.cache)
 
+    def _bt(self) -> Tuple:
+        """Trailing block-table args for paged executables (empty under
+        the slab layout, so call sites can splat unconditionally)."""
+        if not self._paged:
+            return ()
+        return (self.pool.block_tables_device(),)
+
+    def _prepare_append(self, slot: int, n: int) -> None:
+        """Paged pre-dispatch hook: grow/COW ``slot``'s block table to
+        cover the next ``n`` tokens (no-op under the slab layout)."""
+        if self._paged:
+            self.pool.prepare_append(slot, int(self.pool.lengths[slot]), n)
+
     def _build_slot(self, level: int):
         """Slot executable for decode-reservation ``level``: the prefill
         chunk is C - level tokens.  Pre-establishing == compiling now;
@@ -335,7 +407,8 @@ class ServingEngine:
         for _ in range(reps):
             t0 = time.perf_counter()
             lg, _ = fn(self.params, self.pool.cache, toks,
-                       jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1))
+                       jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1),
+                       *self._bt())
             jax.block_until_ready(lg)
             best = min(best, time.perf_counter() - t0)
         return max(best, 1e-9)
@@ -374,14 +447,15 @@ class ServingEngine:
         toks, _, _, _ = fn(self.params, self._cache_clone(),
                            jnp.zeros((B,), jnp.int32),
                            jnp.zeros((B,), jnp.int32),
-                           jnp.zeros((B,), bool))
+                           jnp.zeros((B,), bool), *self._bt())
         jax.block_until_ready(toks)
         return {"steps": level, "fn": fn}
 
     def _warm_prefill(self, fn, chunk: int) -> None:
         toks = jnp.zeros((1, chunk), jnp.int32)
         lg, _ = fn(self.params, self.pool.cache, toks,
-                   jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1))
+                   jnp.int32(0), jnp.int32(0), jnp.int32(chunk - 1),
+                   *self._bt())
         jax.block_until_ready(lg)
 
     def _warm_resume(self, m: int, bucket: int) -> None:
@@ -393,17 +467,18 @@ class ServingEngine:
             jnp.zeros((m, bucket), jnp.int32),
             jnp.arange(m, dtype=jnp.int32),
             jnp.zeros((m,), jnp.int32),
-            jnp.full((m,), bucket - 1, jnp.int32))
+            jnp.full((m,), bucket - 1, jnp.int32), *self._bt())
         jax.block_until_ready(lg)
 
     def _warm_shared(self) -> None:
         B = self.ecfg.num_slots
         zeros_b = jnp.zeros((B,), jnp.int32)
         lg, _ = self._decode_fn(self.params, self.pool.cache, zeros_b,
-                                zeros_b)
+                                zeros_b, *self._bt())
         jax.block_until_ready(lg)
         nt, _, _ = self._ex.fused(self.params, self._cache_clone(), zeros_b,
-                                  zeros_b, jnp.zeros((B,), bool))
+                                  zeros_b, jnp.zeros((B,), bool),
+                                  *self._bt())
         jax.block_until_ready(nt)
         if self.policy.resume_to_decode_queue:
             for m in self._resume_levels:
@@ -448,11 +523,12 @@ class ServingEngine:
         if pad:
             toks = np.concatenate([toks, np.zeros(pad, np.int32)])
         fn = fn or self._prefill_fn
+        self._prepare_append(sess.slot, take)
         logits, new_cache = fn(
             self.params, self.pool.cache,
             jnp.asarray(toks[None], jnp.int32),
             jnp.int32(sess.slot), jnp.int32(self.pool.lengths[sess.slot]),
-            jnp.int32(take - 1))
+            jnp.int32(take - 1), *self._bt())
         self._note_prefill_dispatch([self.pool.lengths[sess.slot]], shape_len)
         self.pool.cache = new_cache
         self.pool.lengths[sess.slot] += take
@@ -576,20 +652,25 @@ class ServingEngine:
                 exe, K = bound[0]["fn"], bound[1]
         if self._window_steps + K > ecfg.telemetry_sample_steps:
             self._flush_decode()
+        for s in active:
+            # paged: grow/COW each active lane's table to cover the K
+            # decode writes BEFORE the device dispatch — the block table
+            # is fixed for the whole (mega)step
+            self._prepare_append(s.slot, K)
         self._sync_device_state(active)
         if self._window_t0 is None:
             self._window_t0 = self._clock()
         if exe is not None:
             step_toks, nt, nc, nl = exe(self.params, self.pool.cache,
                                         self._dev_tokens, self._dev_lengths,
-                                        self._dev_mask)
+                                        self._dev_mask, *self._bt())
             self._window_toks.append(step_toks)      # [K, B] per-step ids
             self.hotpath_stats["megasteps"] += 1
             self.hotpath_stats["mega_tokens"] += K * len(active)
         else:
             nt, nc, nl = self._ex.fused(self.params, self.pool.cache,
                                         self._dev_tokens, self._dev_lengths,
-                                        self._dev_mask)
+                                        self._dev_mask, *self._bt())
             self._window_toks.append(nt)             # [B] one-step ids
             self.hotpath_stats["fused_steps"] += 1
         self._dev_tokens, self._dev_lengths = nt, nl
@@ -709,9 +790,12 @@ class ServingEngine:
                           np.int32)
         logit_idx = np.asarray([t - 1 for t in takes], np.int32)
 
+        for i, (_, s) in enumerate(jobs):
+            self._prepare_append(s.slot, takes[i])
         logits, new_cache = self._ex.resume(
             self.params, self.pool.cache, jnp.asarray(toks),
-            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx))
+            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx),
+            *self._bt())
         self.pool.cache = new_cache
         self.hotpath_stats["resume_batches"] += 1
         self.hotpath_stats["resume_jobs"] += m
@@ -1087,9 +1171,12 @@ class ServingEngine:
                           np.int32)
         logit_idx = np.asarray([t - 1 for t in takes], np.int32)
 
+        for i, (_, s) in enumerate(jobs):
+            self._prepare_append(s.slot, takes[i])
         logits, new_cache = self._ex.resume(
             self.params, self.pool.cache, jnp.asarray(toks),
-            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx))
+            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx),
+            *self._bt())
         self.pool.cache = new_cache
         self._note_prefill_dispatch(lens, bucket, cold_pack=m)
 

@@ -283,7 +283,7 @@ class AgentGateway:
     # ---- observability -------------------------------------------------
     def stats(self) -> Dict[str, float]:
         q_d, q_p = self.engine.queues.occupancy()
-        return {
+        out = {
             **{k: float(v) for k, v in self.counters.items()},
             "gate_admitted": float(self.gate.admitted),
             "gate_rejected": float(self.gate.rejected),
@@ -296,6 +296,12 @@ class AgentGateway:
             "engine_parks": float(self.engine.hotpath_stats["parks"]),
             "engine_unparks": float(self.engine.hotpath_stats["unparks"]),
         }
+        pool = self.engine.pool
+        if hasattr(pool, "free_pages"):   # paged layout (DESIGN.md §8)
+            out["free_pages"] = float(pool.free_pages)
+            out["prefix_hits"] = float(pool.stats["prefix_hits"])
+            out["page_copies"] = float(pool.stats["page_copies"])
+        return out
 
 
 # ---------------------------------------------------------------------------

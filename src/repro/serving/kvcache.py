@@ -16,20 +16,31 @@ too: a recurrent state is a point summary valid only at the exact
 length it was taken, and the donor immediately advances past it —
 Marconi (paper ref [9], MLSys'25) makes the same observation for
 hybrid-LLM prefix caching.
+
+Paged layout (``PagedKVCachePool``, DESIGN.md §8): positional leaves
+(attention K/V + quant scales) live in a flat page arena
+``[num_pages + 1, page_size, ...]`` addressed through per-slot block
+tables; SSM leaves stay per-slot point summaries (the Marconi argument
+above — a recurrent state has no positional rows to share).  Pages are
+*refcounted*: a prefix hit or a TOOL_WAIT park is block-table surgery
+(O(metadata), zero device copies for the positional data), and the
+first divergent write to a shared page triggers a one-page
+copy-on-write.  The slab ``KVCachePool`` remains the reference /
+parity oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import hashlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import POSITIONAL_CACHE_KEYS, init_cache
+from repro.models import POSITIONAL_CACHE_KEYS, init_cache, num_kv_pages
 
 
 def _prefix_key(tokens: np.ndarray) -> str:
@@ -69,7 +80,7 @@ class KVCachePool:
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_seq = max_seq
-        self.cache = init_cache(cfg, num_slots, max_seq, dtype)
+        self.cache = self._init_cache(cfg, num_slots, max_seq, dtype)
         self.lengths = np.zeros((num_slots,), np.int32)
         self._free = set(range(num_slots))
         self._prefix: Dict[str, PrefixEntry] = {}
@@ -81,6 +92,9 @@ class KVCachePool:
         self.stats = {"alloc": 0, "free": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefix_refreshes": 0,
                       "evictions": 0, "parks": 0, "unparks": 0}
+
+    def _init_cache(self, cfg, num_slots, max_seq, dtype):
+        return init_cache(cfg, num_slots, max_seq, dtype)
 
     # ---- slot lifecycle -------------------------------------------------
     def alloc(self) -> int:
@@ -107,9 +121,20 @@ class KVCachePool:
                       for name, layer in self.cache.items()}
 
     def free(self, slot: int) -> None:
+        self._check_allocated(slot)
         self._free.add(slot)
         self.lengths[slot] = 0
         self.stats["free"] += 1
+
+    def _check_allocated(self, slot: int) -> None:
+        """Freeing a slot that is not currently allocated must be loud:
+        silently re-adding it to ``_free`` would hand the same slot to
+        two sessions (and, under the paged layout, corrupt page
+        refcounts)."""
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"free of invalid slot {slot}")
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
 
     @property
     def free_slots(self) -> int:
@@ -166,8 +191,11 @@ class KVCachePool:
         if not self._prefix:
             return
         key = min(self._prefix, key=lambda k: self._prefix[k].last_used)
-        del self._prefix[key]
+        self._drop_entry(self._prefix.pop(key))
         self.stats["evictions"] += 1
+
+    def _drop_entry(self, entry) -> None:
+        """Entry-eviction hook (the paged pool releases page refs)."""
 
     # ---- tool-wait parking ----------------------------------------------
     def park(self, slot: int) -> PrefixEntry:
@@ -214,3 +242,297 @@ class KVCachePool:
         total = sum(l.size * l.dtype.itemsize
                     for l in jax.tree_util.tree_leaves(self.cache))
         return total // self.num_slots
+
+
+# ---------------------------------------------------------------------------
+# paged layout (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _is_positional(layer: Dict[str, Any]) -> bool:
+    return set(layer) <= POSITIONAL_CACHE_KEYS
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _fused_page_copy(cache, src, dst):
+    """Copy one physical page (all positional leaves) — the COW cost of
+    the first divergent write to a shared page.  O(page), not O(seq)."""
+    def cp(layer):
+        if _is_positional(layer):
+            return {k: v.at[:, dst].set(v[:, src]) for k, v in layer.items()}
+        return layer
+    return {name: cp(layer) for name, layer in cache.items()}
+
+
+@jax.jit
+def _fused_state_snapshot(cache, slot):
+    """Gather a slot's *stateful* (SSM) leaves only — the length-point
+    summary a paged prefix/park entry must still carry on hybrid
+    stacks (positional data is shared by page reference instead)."""
+    return {name: {k: v[:, slot] for k, v in layer.items()}
+            for name, layer in cache.items() if not _is_positional(layer)}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _fused_state_restore(cache, snap, slot):
+    out = {}
+    for name, layer in cache.items():
+        if name in snap:
+            out[name] = {k: v.at[:, slot].set(snap[name][k])
+                         for k, v in layer.items()}
+        else:
+            out[name] = layer
+    return out
+
+
+@dataclasses.dataclass
+class PagedEntry:
+    """A paged prefix/park entry: shared page ids + (hybrid only) the
+    SSM point snapshot.  Holding the entry holds one reference on every
+    listed page."""
+    pages: np.ndarray      # int32 [n] physical page ids (no -1 entries)
+    length: int
+    state: Any = None      # stateful-leaf snapshot, or None (dense)
+    refs: int = 0
+    last_used: int = 0
+
+
+class PagedKVCachePool(KVCachePool):
+    """Block-table pool over a flat page arena (DESIGN.md §8).
+
+    Positional leaves: ``[G, num_pages + 1, page_size, Hk, hd]`` — the
+    last physical page is the write scratch page (never read, never
+    allocated).  Per-slot block tables map logical page index ->
+    physical page; ``-1`` marks unallocated entries (substituted with
+    the scratch page id in the device mirror, so padded/inactive writes
+    land there).  Pages are refcounted:
+
+    * ``register_prefix`` / ``restore_prefix`` (prefix hit) and
+      ``park`` / ``unpark`` are block-table surgery — zero device
+      copies for positional data (``stats["page_copies"]`` counts the
+      exceptions; hybrid stacks pay one small SSM point-snapshot,
+      ``stats["state_copies"]``).
+    * Writers must call ``prepare_append(slot, start, n)`` before
+      dispatching device work that writes positions ``[start,
+      start+n)``: it allocates missing pages and copy-on-writes shared
+      ones, so the model-side scatter never touches a page another
+      session can read.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_seq: int,
+                 dtype=jnp.float32, max_prefix_entries: int = 8,
+                 num_pages: int = 0):
+        assert cfg.kv_layout == "paged", cfg.kv_layout
+        self.page_size = cfg.kv_page_size
+        assert max_seq % self.page_size == 0, (max_seq, self.page_size)
+        self.pages_per_slot = max_seq // self.page_size      # P_max
+        self.num_pages = num_pages or num_kv_pages(cfg, num_slots, max_seq)
+        self.scratch_page = self.num_pages    # last physical arena page
+        super().__init__(cfg, num_slots, max_seq, dtype, max_prefix_entries)
+        self.block_table = np.full((num_slots, self.pages_per_slot), -1,
+                                   np.int32)
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        # LIFO free list popping low page ids first (determinism in tests)
+        self._free_pages: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self._bt_dev: Optional[jax.Array] = None
+        self.stats.update({"page_allocs": 0, "page_frees": 0,
+                           "page_copies": 0, "state_copies": 0,
+                           "shared_pages": 0})
+
+    def _init_cache(self, cfg, num_slots, max_seq, dtype):
+        return init_cache(cfg, num_slots, max_seq, dtype,
+                          num_pages=self.num_pages)
+
+    # ---- page accounting ------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def _alloc_page(self) -> int:
+        if not self._free_pages:
+            raise RuntimeError("KV page pool exhausted: no free page")
+        p = self._free_pages.pop()
+        self.refcount[p] = 1
+        self.stats["page_allocs"] += 1
+        return p
+
+    def _incref(self, page: int) -> None:
+        self.refcount[page] += 1
+
+    def _decref(self, page: int) -> None:
+        assert self.refcount[page] > 0, page
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free_pages.append(page)
+            self.stats["page_frees"] += 1
+
+    def _npages(self, length: int) -> int:
+        return -(-length // self.page_size)
+
+    # ---- slot lifecycle -------------------------------------------------
+    def free(self, slot: int) -> None:
+        self._check_allocated(slot)
+        for p in self.block_table[slot]:
+            if p >= 0:
+                self._decref(int(p))
+        self.block_table[slot] = -1
+        self._bt_dev = None
+        super().free(slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot whose page references were transferred to a
+        parked entry — the table row is cleared WITHOUT decref."""
+        self._check_allocated(slot)
+        self.block_table[slot] = -1
+        self._bt_dev = None
+        self._free.add(slot)
+        self.lengths[slot] = 0
+        self.stats["free"] += 1
+
+    def prepare_append(self, slot: int, start: int, n: int) -> None:
+        """Make positions ``[start, start + n)`` of ``slot`` writable:
+        allocate unmapped pages and copy-on-write shared ones.  Must run
+        before any device dispatch that writes those positions (prefill
+        chunk, decode step, megastep of K).  Positions beyond the
+        table's extent are ignored — the model-side scatter redirects
+        them to the scratch page (the engine counts such overruns)."""
+        if n <= 0:
+            return
+        first = start // self.page_size
+        last = self._npages(start + n)                # exclusive bound
+        for lp in range(first, min(last, self.pages_per_slot)):
+            page = int(self.block_table[slot, lp])
+            if page < 0:
+                self.block_table[slot, lp] = self._alloc_page()
+                self._bt_dev = None
+            elif self.refcount[page] > 1:
+                fresh = self._alloc_page()
+                self.cache = _fused_page_copy(self.cache, jnp.int32(page),
+                                              jnp.int32(fresh))
+                self._decref(page)
+                self.block_table[slot, lp] = fresh
+                self._bt_dev = None
+                self.stats["page_copies"] += 1
+
+    def block_tables_device(self) -> jax.Array:
+        """Device mirror of the block tables with ``-1`` entries mapped
+        to the scratch page (so padded/inactive writes are harmlessly
+        absorbed).  Rebuilt only after table mutations."""
+        if self._bt_dev is None:
+            host = np.where(self.block_table < 0, self.scratch_page,
+                            self.block_table).astype(np.int32)
+            self._bt_dev = jnp.asarray(host)
+        return self._bt_dev
+
+    # ---- prefix cache: zero-copy page sharing ---------------------------
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Share ``slot``'s prefix pages by reference: O(metadata), no
+        device gather of positional data.  Hybrid stacks snapshot the
+        (small) SSM point state — the only device work."""
+        assert self.lengths[slot] == len(tokens), \
+            (self.lengths[slot], len(tokens))
+        key = _prefix_key(tokens)
+        self._tick += 1
+        entry = self._prefix.get(key)
+        if entry is not None:
+            entry.last_used = self._tick
+            self.stats["prefix_refreshes"] += 1
+            return
+        if len(self._prefix) >= self.max_prefix_entries:
+            self._evict_one()
+        pages = self.block_table[slot, :self._npages(len(tokens))].copy()
+        assert (pages >= 0).all(), pages
+        for p in pages:
+            self._incref(int(p))
+        self.stats["shared_pages"] += len(pages)
+        state = None
+        if self._has_state_leaves:
+            state = _fused_state_snapshot(self.cache, jnp.int32(slot))
+            self.stats["state_copies"] += 1
+        self._prefix[key] = PagedEntry(pages=pages, length=len(tokens),
+                                       state=state, last_used=self._tick)
+
+    def restore_prefix(self, dst_slot: int, entry: PagedEntry) -> None:
+        """A prefix hit: point ``dst_slot``'s table at the shared pages
+        (refcount++) — zero positional device copies.  The first write
+        past/into the shared tail page copy-on-writes via
+        ``prepare_append``."""
+        for i, p in enumerate(entry.pages):
+            self._incref(int(p))
+            self.block_table[dst_slot, i] = int(p)
+        self._bt_dev = None
+        self.lengths[dst_slot] = entry.length
+        if entry.state is not None:
+            self.cache = _fused_state_restore(self.cache, entry.state,
+                                              jnp.int32(dst_slot))
+            self.stats["state_copies"] += 1
+
+    def _drop_entry(self, entry: PagedEntry) -> None:
+        for p in entry.pages:
+            self._decref(int(p))
+
+    # ---- tool-wait parking: reference transfer --------------------------
+    def park(self, slot: int) -> PagedEntry:
+        """Park = transfer the slot's page references to the returned
+        entry and free the slot — no device copy of positional data
+        (hybrid: one SSM point snapshot).  The caller owns the entry;
+        it is not registered in the LRU-evictable prefix store."""
+        pages = self.block_table[slot]
+        pages = pages[pages >= 0].copy()
+        state = None
+        if self._has_state_leaves:
+            state = _fused_state_snapshot(self.cache, jnp.int32(slot))
+            self.stats["state_copies"] += 1
+        entry = PagedEntry(pages=pages, length=int(self.lengths[slot]),
+                           state=state)
+        self._release_slot(slot)          # refs move with the entry
+        self.stats["parks"] += 1
+        return entry
+
+    def unpark(self, slot: int, entry: PagedEntry) -> None:
+        """Restore a parked entry into a freshly allocated slot: the
+        page references transfer back (no incref, no copy)."""
+        self.block_table[slot, :len(entry.pages)] = entry.pages
+        self._bt_dev = None
+        self.lengths[slot] = entry.length
+        if entry.state is not None:
+            self.cache = _fused_state_restore(self.cache, entry.state,
+                                              jnp.int32(slot))
+            self.stats["state_copies"] += 1
+        self.stats["unparks"] += 1
+
+    # ---- step integration ----------------------------------------------
+    def commit(self, new_cache, slot_mask: np.ndarray) -> None:
+        """Paged commit: positional leaves are the shared arena (writes
+        already landed page-exactly), so only stateful leaves need the
+        inactive-lane protection."""
+        m = jnp.asarray(slot_mask)
+
+        def sel(name, new_l):
+            if _is_positional(new_l):
+                return new_l
+            out = {}
+            for k, n in new_l.items():
+                shape = (1, self.num_slots) + (1,) * (n.ndim - 2)
+                out[k] = jnp.where(m.reshape(shape), n, self.cache[name][k])
+            return out
+        self.cache = {name: sel(name, layer)
+                      for name, layer in new_cache.items()}
+
+    def arena_bytes(self) -> int:
+        """Positional-arena footprint (the capacity denominator for the
+        max-concurrent-sessions benchmark)."""
+        return sum(
+            l.size * l.dtype.itemsize
+            for name, layer in self.cache.items() if _is_positional(layer)
+            for l in layer.values())
+
+
+def make_pool(cfg: ModelConfig, num_slots: int, max_seq: int,
+              dtype=jnp.float32, max_prefix_entries: int = 8,
+              num_pages: int = 0) -> KVCachePool:
+    """Layout-dispatching pool factory (``ModelConfig.kv_layout``)."""
+    if cfg.kv_layout == "paged":
+        return PagedKVCachePool(cfg, num_slots, max_seq, dtype,
+                                max_prefix_entries, num_pages)
+    return KVCachePool(cfg, num_slots, max_seq, dtype, max_prefix_entries)

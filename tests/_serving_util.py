@@ -8,6 +8,8 @@ token.  The oracle computes exactly that with the engine's own warmed
 executables, so regression tests can assert token-for-token identity
 for any engine/reactor/gateway drive path.
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,7 +19,13 @@ from repro.serving.kvcache import KVCachePool
 
 def oracle_streams(cfg, params, sessions, *, num_slots, max_seq,
                    moe_mode="dense"):
-    """{session_id: [token ids]} for each session decoded in isolation."""
+    """{session_id: [token ids]} for each session decoded in isolation.
+
+    Always runs the slab layout — the oracle is the layout-independent
+    greedy reference, so paged-engine streams are asserted against the
+    exact same executables the slab engine dispatches."""
+    if cfg.kv_layout != "slab":
+        cfg = dataclasses.replace(cfg, kv_layout="slab")
     ex = get_executables(cfg, num_slots, max_seq, moe_mode)
     out = {}
     for s in sessions:
