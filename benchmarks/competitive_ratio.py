@@ -26,7 +26,7 @@ def run(tpot_slo_factor: float = 1.5, eps_bar: float = 0.02):
 
     ws = make_workload(8, vocab_size=BENCH_MODEL.vocab_size,
                        token_scale=0.5, seed=2, stagger_s=0.02)
-    res = simulate(prof, sessions_from_workload(ws), policy="agentserve",
+    res = simulate(prof, sessions_from_workload(ws), planner="agentserve",
                    tpot_slo_ms=slo_ms, eps_ctx=eps_bar)
     eta_bar = float(np.mean(res.eta_trace)) if res.eta_trace else 0.5
     achieved = comp.achieved_service(

@@ -1,5 +1,12 @@
 """Fig 7 reproduction: ablation at N=4-6 concurrent agents, p95 tails.
 
+The sweep is driven through the **planner registry** (DESIGN.md §9):
+every registered policy — the paper's comparison set plus the
+SLO-class ``priority`` planner — runs on identical engine machinery,
+and each row carries its plan-journal summary (cycles, preemptions,
+mean scheduled chunk) so scheduling behaviour is attributable per
+policy, not inferred from tails alone.
+
   No-Alg   — Algorithm 1 disabled: static partition at 20/50/80% decode
              reservation (the paper fixes one static point; we sweep to
              show what adaptation buys — matching the best static point
@@ -13,43 +20,54 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import calibrated_thresholds, make_engine, sessions_for
+from benchmarks.common import calibrated_thresholds, sessions_for
 from repro.serving.engine import ServingEngine
-from repro.serving.policies import NO_ALG, POLICIES
+from repro.serving.policies import NO_ALG, PLANNERS, make_planner
+
+
+def variants():
+    """(name, planner) pairs: the registry plus the static-partition
+    sweep derived from No-Alg."""
+    out = [(name, make_planner(spec)) for name, spec in PLANNERS.items()]
+    for frac in (0.2, 0.5, 0.8):
+        out.append((f"no_alg_static{int(frac * 100)}",
+                    make_planner(dataclasses.replace(
+                        NO_ALG, static_r_frac=frac))))
+    return out
 
 
 def run(concurrency: int = 4, seed: int = 0):
     from benchmarks.common import BENCH_MODEL, bench_params, engine_config
     thr = calibrated_thresholds()
     rows = []
-    variants = [("agentserve", POLICIES["agentserve"]),
-                ("no_green", POLICIES["no_green"])]
-    for frac in (0.2, 0.5, 0.8):
-        variants.append((f"no_alg_static{int(frac * 100)}",
-                         dataclasses.replace(NO_ALG, static_r_frac=frac)))
-    for name, pol in variants:
-        eng = ServingEngine(BENCH_MODEL, bench_params(), pol,
+    for name, planner in variants():
+        eng = ServingEngine(BENCH_MODEL, bench_params(), planner,
                             engine_config())
         rep = eng.run(sessions_for(concurrency, seed=seed), thr)
         warm = sum(eng.slots.stats.warmup_s.values())
+        j = eng.journal.summary()
         rows.append(dict(policy=name,
                          ttft_p95_ms=1e3 * rep.ttft_p95_s,
                          tpot_p95_ms=1e3 * rep.tpot_p95_s,
                          slo=rep.slo_attainment,
                          warmup_s=warm,
                          mean_rebind_us=eng.slots.stats.mean_rebind_us,
-                         on_demand_builds=eng.slots.stats.misses))
+                         on_demand_builds=eng.slots.stats.misses,
+                         cycles=int(j["cycles"]),
+                         preemptions=int(j["preemptions"]),
+                         mean_chunk=j["mean_chunk"]))
     return rows
 
 
 def main():
     rows = run()
     print("fig7: policy,ttft_p95_ms,tpot_p95_ms,slo,warmup_s,"
-          "mean_rebind_us,on_demand_builds")
+          "mean_rebind_us,on_demand_builds,cycles,preemptions,mean_chunk")
     for r in rows:
         print(f"fig7,{r['policy']},{r['ttft_p95_ms']:.2f},"
               f"{r['tpot_p95_ms']:.2f},{r['slo']:.3f},{r['warmup_s']:.2f},"
-              f"{r['mean_rebind_us']:.1f},{r['on_demand_builds']}")
+              f"{r['mean_rebind_us']:.1f},{r['on_demand_builds']},"
+              f"{r['cycles']},{r['preemptions']},{r['mean_chunk']:.1f}")
     return rows
 
 

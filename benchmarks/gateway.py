@@ -32,7 +32,7 @@ from repro.serving.gateway import (AgentGateway, GatewayConfig,
                                    drive_open_loop)
 from repro.serving.metrics import (OpenLoopReport, SLOThresholds,
                                    build_open_loop_report)
-from repro.serving.policies import POLICIES
+from repro.serving.policies import PLANNERS
 from repro.serving.request import SessionState
 from repro.serving.workload import make_open_loop_workload
 
@@ -43,7 +43,7 @@ def run_rate(cfg, params, args, rate: float) -> dict:
                         cycle_budget=160, granularity=16,
                         control_interval_s=0.1,
                         max_wall_s=float("inf"))
-    engine = ServingEngine(cfg, params, POLICIES[args.policy], ecfg)
+    engine = ServingEngine(cfg, params, PLANNERS[args.policy], ecfg)
     gateway = AgentGateway(engine, GatewayConfig(
         high_watermark=args.high_watermark, tool_policy=args.tool_policy))
     sessions = make_open_loop_workload(
@@ -81,7 +81,7 @@ def main():
     ap.add_argument("--agents", type=int, default=12)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--policy", default="agentserve",
-                    choices=sorted(POLICIES))
+                    choices=sorted(PLANNERS))
     ap.add_argument("--workload", default="react",
                     choices=["react", "plan_execute"])
     ap.add_argument("--token-scale", type=float, default=0.0625)

@@ -3,10 +3,19 @@
 Phase-aware classification (phases.py), TPOT-driven feedback scheduling
 (scheduler.py, Algorithm 1), pre-established discrete resource slots
 (slots.py, the CUDA Green Context analogue), dual-queue admission
-(admission.py), and the competitive-ratio analysis (competitive.py).
+(admission.py), the competitive-ratio analysis (competitive.py), and
+the pure plan-based scheduling core (planner.py, DESIGN.md §9): one
+``CyclePlanner`` per policy over an immutable ``EngineView``, consumed
+identically by the real engine and the fluid simulator.
 """
 from repro.core.phases import Phase, PhaseThresholds, classify  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     ControlState, SchedulerConfig, TPOTScheduler)
 from repro.core.slots import SlotManager, SlotStats  # noqa: F401
 from repro.core.admission import AdmissionQueues, Job  # noqa: F401
+from repro.core.planner import (  # noqa: F401
+    Admission, ColdOp, CyclePlan, CyclePlanner, CycleRecord, DecodePlan,
+    EngineView, JobView, PlanJournal, PolicySpec, ReplayPlanner,
+    ResumePlan, SessionView)
+# (name -> planner resolution lives in repro.serving.policies.make_planner,
+#  next to the named PolicySpec registry; core's make_planner is spec-only)

@@ -40,7 +40,7 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.gateway import AgentGateway, GatewayConfig, Rejected
 from repro.serving.metrics import (OpenLoopReport, ServingReport,
                                    SLOThresholds, build_open_loop_report)
-from repro.serving.policies import POLICIES
+from repro.serving.policies import PLANNERS, POLICIES
 from repro.serving.workload import (SPECS, make_session, make_workload,
                                     poisson_arrivals)
 
@@ -64,16 +64,23 @@ def _json_resp(status: int, obj) -> bytes:
 
 def _session_from_spec(spec: Dict, mcfg, default_token_scale: float):
     """Build a scripted agent session from a client JSON spec:
-    ``{"workload": "react", "seed": 7, "token_scale": 0.1}``.  The
-    session_id is assigned by the gateway at admission."""
+    ``{"workload": "react", "seed": 7, "token_scale": 0.1,
+    "slo_class": "interactive"}``.  The session_id is assigned by the
+    gateway at admission; ``slo_class`` matters under ``--policy
+    priority`` (interactive requests preempt batch cold prefills)."""
     workload = spec.get("workload", "react")
     if workload not in SPECS:
         raise ValueError(f"unknown workload {workload!r}")
+    slo_class = spec.get("slo_class", "batch")
+    if slo_class not in ("interactive", "batch"):
+        raise ValueError(f"unknown slo_class {slo_class!r}")
     seed = int(spec.get("seed", 0))
     scale = float(spec.get("token_scale", default_token_scale))
     rng = np.random.default_rng(seed)
-    return make_session(-1, SPECS[workload], rng, mcfg.vocab_size,
+    sess = make_session(-1, SPECS[workload], rng, mcfg.vocab_size,
                         token_scale=scale)
+    sess.slo_class = slo_class
+    return sess
 
 
 async def _read_request(reader) -> Tuple[str, str, Dict[str, str], bytes]:
@@ -227,7 +234,7 @@ def _build_engine(args, *, max_wall_s: float = 300.0,
     ecfg = EngineConfig(num_slots=max(args.agents + 2, 6), max_seq=1024,
                         cycle_budget=160, granularity=16,
                         control_interval_s=0.1, max_wall_s=max_wall_s)
-    return ServingEngine(cfg, params, POLICIES[args.policy], ecfg), cfg
+    return ServingEngine(cfg, params, PLANNERS[args.policy], ecfg), cfg
 
 
 def build_gateway(args) -> Tuple[AgentGateway, object]:
@@ -336,7 +343,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--policy", default="agentserve",
-                    choices=sorted(POLICIES))
+                    choices=sorted(PLANNERS))
     ap.add_argument("--agents", type=int, default=4)
     ap.add_argument("--workload", default="react",
                     choices=["react", "plan_execute"])

@@ -10,6 +10,14 @@ chunk processed that cycle.  Resume prefills within B_prefill(t) are
 fused into the decode stream (Q_D); cold prefills only ever run from
 the prefill stream (Q_P) — the isolation invariant.
 
+Plan → execute (DESIGN.md §9): the engine makes **no scheduling
+decisions**.  Each ``step()`` asks its ``CyclePlanner`` (a pure
+strategy over an immutable ``EngineView`` — ``core/planner.py``) for a
+declarative ``CyclePlan``, then the ``Dispatcher`` carries the plan out
+against the warmed executables and the KV pool.  Every executed plan is
+journaled; replaying a journal through the same dispatcher reproduces a
+run's token events deterministically.
+
 TPOT mapping: on GPU, shrinking decode's SM share inflates the decode
 kernel's own latency; in the temporal adaptation the decode kernel time
 is constant but the *inter-emission gap* (cycle time) grows with the
@@ -64,15 +72,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.admission import AdmissionQueues, Job
-from repro.core.phases import Phase, PhaseThresholds, classify
+from repro.core.phases import Phase, PhaseThresholds
+from repro.core.planner import (Admission, ColdOp, CyclePlan, CyclePlanner,
+                                CycleRecord, EngineView, JobView,
+                                PlanJournal, ResumePlan, SessionView)
 from repro.core.scheduler import SchedulerConfig, TPOTScheduler
 from repro.core.slots import SlotManager
 from repro.models import (POSITIONAL_CACHE_KEYS, forward_decode,
                           forward_decode_fused, forward_decode_megastep,
                           forward_prefill, forward_resume_batch)
-from repro.serving.kvcache import make_pool
+from repro.serving.kvcache import make_pool, prefix_key
 from repro.serving.metrics import ServingReport, SLOThresholds, build_report
-from repro.serving.policies import PolicySpec
+from repro.serving.policies import PolicySpec, make_planner
 from repro.serving.reactor import TokenEvent
 from repro.serving.request import Session, SessionState
 
@@ -110,6 +121,9 @@ class EngineConfig:
     #                                  the trace without bound)
     record_events: bool = False      # run(): keep TokenEvents in
     #                                  engine.event_log (regression tests)
+    # --- plan journal (DESIGN.md §9) ----------------------------------
+    journal_max: int = 200_000       # executed CyclePlans kept for
+    #                                  replay / per-policy reporting
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -254,13 +268,87 @@ def get_executables(mcfg: ModelConfig, num_slots: int, max_seq: int,
     return _EXEC_CACHE[key]
 
 
+@dataclasses.dataclass
+class CycleOutcome:
+    """What one dispatched cycle observably did (telemetry feed)."""
+    did_work: bool = False
+    q_d: int = 0
+    q_p: int = 0
+    q_p_cold: int = 0                # cold-phase jobs in Q_P
+    q_p_resume: int = 0              # over-budget resumes re-routed to Q_P
+    active: int = 0
+
+
+class Dispatcher:
+    """Carries a ``CyclePlan`` out against the engine's warmed
+    executables and KV pool — all mechanism, no decisions.  The only
+    choices made here are *safety clamps* (burst/capacity bounds on the
+    megastep K, free-slot checks) that keep a diverged or replayed plan
+    from corrupting state."""
+
+    def __init__(self, engine: "ServingEngine"):
+        self.eng = engine
+
+    def execute(self, plan: CyclePlan, now: float) -> CycleOutcome:
+        eng = self.eng
+        out = CycleOutcome()
+        for sid in plan.preempt:
+            eng._preempt_prefill(sid)
+        for adm in plan.admissions:
+            eng._exec_admission(adm, now)
+        out.q_d, out.q_p = eng.queues.occupancy()
+        out.q_p_cold = sum(1 for j in eng.queues.q_prefill
+                           if j.phase == Phase.COLD_PREFILL)
+        out.q_p_resume = out.q_p - out.q_p_cold
+        out.active = sum(1 for s in eng._sessions.values()
+                         if s.state == SessionState.DECODING)
+        slot_exec = None
+        if plan.slot_level > 0:
+            slot_exec, _ = eng.slots.bind(plan.slot_level)
+
+        # ---- decode stream ----------------------------------------
+        if plan.decode is not None:
+            active = [eng._sessions[sid] for sid in plan.decode.session_ids
+                      if sid in eng._sessions
+                      and eng._sessions[sid].state == SessionState.DECODING]
+            if active:
+                eng._decode_dispatch(active, plan.decode.megastep_target)
+                out.did_work = True
+        elif plan.flush_idle:
+            eng._flush_decode()
+            eng._window_t0 = None
+
+        # ---- resume prefills fused into the decode stream --------
+        if plan.resume is not None:
+            out.did_work |= eng._exec_resume(plan.resume)
+
+        # ---- prefill stream (cold / over-budget / phase-blind) ----
+        eng._drop_stale_prefill_heads()
+        for op in plan.prefill:
+            if op.reclaim and any(
+                    s.state == SessionState.DECODING
+                    for s in eng._sessions.values()):
+                break                # decode demand appeared mid-cycle
+            out.did_work |= eng._exec_cold_op(op, slot_exec)
+
+        for sid in plan.unsuspend:
+            eng._unsuspend_prefill(sid, now)
+        return out
+
+
 class ServingEngine:
-    def __init__(self, model_cfg: ModelConfig, params, policy: PolicySpec,
+    def __init__(self, model_cfg: ModelConfig, params, policy,
                  engine_cfg: Optional[EngineConfig] = None,
                  dtype=jnp.float32):
         self.mcfg = model_cfg
         self.params = params
-        self.policy = policy
+        # ``policy`` may be a PolicySpec (resolved through the planner
+        # registry), a policy name, or a ready CyclePlanner instance
+        # (e.g. ReplayPlanner).  The spec remains the construction-time
+        # config: which executable shapes to warm, pre-establish or not.
+        self.planner: CyclePlanner = make_planner(policy)
+        self.policy: PolicySpec = self.planner.spec
+        policy = self.policy
         self.ecfg = engine_cfg or EngineConfig()
         self._paged = model_cfg.kv_layout == "paged"
         self.pool = make_pool(model_cfg, self.ecfg.num_slots,
@@ -315,6 +403,10 @@ class ServingEngine:
         # run-state
         self._t0 = time.perf_counter()
         self.trace: List[Dict] = []       # per-cycle telemetry (Fig 2)
+        # plan → execute state (DESIGN.md §9)
+        self.dispatcher = Dispatcher(self)
+        self.journal = PlanJournal(max_records=self.ecfg.journal_max)
+        self._cycle = 0
         # reactor state (DESIGN.md §6): the registry of live sessions,
         # the control-clock deadline, and the per-cycle token events
         # drained by step().  run() and the online gateway share these.
@@ -322,6 +414,9 @@ class ServingEngine:
         self._events: List[TokenEvent] = []
         self._next_ctrl = self.ecfg.control_interval_s
         self._parked: Dict[int, object] = {}   # sid -> parked KV snapshot
+        self._paused_seq: Dict[int, int] = {}  # sid -> preemption stamp
+        self._preempt_count = 0
+        self._prefix_keys: Dict[int, str] = {}  # sid -> cached prefix hash
         self.last_step_did_work = False
         self.event_log: List[TokenEvent] = []  # run(), record_events only
         # device-resident decode state (rebuilt from host mirrors only on
@@ -347,7 +442,8 @@ class ServingEngine:
                               "cold_batches": 0, "cold_jobs": 0,
                               "prefill_tiles_streamed": 0,
                               "prefill_tiles_skipped": 0,
-                              "parks": 0, "unparks": 0}
+                              "parks": 0, "unparks": 0,
+                              "preemptions": 0, "preempt_resumes": 0}
         # prefill-side telemetry accumulated at dispatch time (host
         # arithmetic only) and folded into hotpath_stats at the sampled
         # flush cadence
@@ -412,25 +508,6 @@ class ServingEngine:
             jax.block_until_ready(lg)
             best = min(best, time.perf_counter() - t0)
         return max(best, 1e-9)
-
-    def _tuned_chunk(self, budget: int, bound_fn):
-        """Autotuned (chunk, fn, reps) for a prefill budget.  Picks the
-        measured-fastest warmed chunk ≤ budget, preferring the full
-        budget unless a smaller chunk is >10% faster (timing noise
-        guard); ``reps`` dispatches fill the remaining budget.  Falls
-        back to (budget, bound_fn, 1) — the seed behaviour — when
-        autotune is off or nothing is warmed (No-Green)."""
-        table = self._chunk_tok_s
-        if not self.ecfg.autotune_chunks or not table:
-            return budget, bound_fn, 1
-        cands = [c for c in table if c <= budget]
-        if not cands:
-            return budget, bound_fn, 1
-        full = max(cands)
-        best = max(cands, key=lambda c: table[c])
-        chunk = best if table[best] > 1.10 * table[full] else full
-        reps = max(1, min(budget // chunk, 4))
-        return chunk, self._chunk_fns[chunk], reps
 
     def _build_megastep(self, level: int):
         """Megastep executable fusing ``level`` decode iterations."""
@@ -622,11 +699,12 @@ class ServingEngine:
         self._dev_ids = ids
         self._dev_dirty = False
 
-    def _decode_dispatch(self, active: Sequence[Session], now: float,
-                         next_ctrl: float, q_d: int, q_p: int) -> None:
+    def _decode_dispatch(self, active: Sequence[Session],
+                         megastep_target: int) -> None:
         """Dispatch one fused decode step — or a K-step megastep when
-        both queues are empty and no control update is due before the
-        boundary — without blocking on the result."""
+        the plan asked for one — without blocking on the result.  The
+        planner's K target is clamped to the live burst/capacity bounds
+        (correctness clamps, not decisions)."""
         ecfg = self.ecfg
         if (self._window_sessions
                 and [s.session_id for s in self._window_sessions]
@@ -642,12 +720,9 @@ class ServingEngine:
             self.hotpath_stats["capacity_overruns"] += 1
             k_cap = 1
         exe, K = None, 1
-        if self.megasteps is not None and q_d == 0 and q_p == 0:
-            k_fit = k_alive
-            tpot_s = self.scheduler.state.tpot_step_ms / 1000.0
-            if tpot_s > 0:
-                k_fit = max(1, int((next_ctrl - now) / tpot_s))
-            bound = self.megasteps.bind_down(min(k_alive, k_cap, k_fit))
+        if self.megasteps is not None and megastep_target > 0:
+            bound = self.megasteps.bind_down(
+                min(megastep_target, k_alive, k_cap))
             if bound is not None:
                 exe, K = bound[0]["fn"], bound[1]
         if self._window_steps + K > ecfg.telemetry_sample_steps:
@@ -754,37 +829,162 @@ class ServingEngine:
             sess.ready_s = now + sess.turns[sess.turn_idx - 1].tool_latency_s
 
     # ------------------------------------------------------------------
-    # resume prefills (batched, fused into the decode stream)
+    # plan execution: admission
     # ------------------------------------------------------------------
-    def _resume_batch_step(self) -> bool:
-        """Pack up to M resume jobs from Q_D into one [M, bucket]
-        executable with per-row slots/lengths.  M rounds down to a
-        warmed batch size; leftover jobs stay at the queue head."""
+    def _exec_admission(self, adm: Admission, now: float) -> None:
+        s = self._sessions.get(adm.session_id)
+        if s is None:
+            return
+        if s.state == SessionState.WAITING_PREFILL:
+            if self.pool.free_slots == 0:
+                return  # backpressure: the planner retries next cycle
+            s.slot = self.pool.alloc()
+            # always probe, even when the plan's peek saw a miss: the
+            # pool's hit/miss accounting and LRU recency refresh are
+            # dispatch-time effects that must happen exactly once —
+            # adm.restore_prefix records the planner's expectation
+            self._maybe_restore_prefix(s)
+        elif s.state == SessionState.TOOL_CALL:
+            if adm.unpark and s.slot < 0 and s.session_id in self._parked:
+                # parked during TOOL_WAIT (release-under-pressure
+                # policy): needs a fresh slot + a lossless restore
+                # before its resume prefill may run
+                if self.pool.free_slots == 0:
+                    return
+                s.slot = self.pool.alloc()
+                self.pool.unpark(s.slot,
+                                 self._parked.pop(s.session_id))
+                self.hotpath_stats["unparks"] += 1
+            elif s.slot < 0:
+                return                   # parked, but the plan diverged
+        else:
+            return                       # stale plan entry
+        self._submit(s, now, adm)
+
+    def _maybe_restore_prefix(self, s: Session) -> None:
+        if s.shared_prefix_len <= 0:
+            return
+        entry = self.pool.lookup(
+            s.turns[0].prefill_tokens[:s.shared_prefix_len])
+        if entry is not None:
+            self.pool.restore_prefix(s.slot, entry)
+            s.cached_len = entry.length
+            s.prefill_done = entry.length
+
+    def _submit(self, s: Session, now: float, adm: Admission) -> None:
+        s.arrival_s = now
+        s.request_arrivals.append(now)
+        # queue delay: how long the request sat ready (slot/backpressure
+        # wait) before admission — the open-loop breakdown metric
+        s.queue_delays_s.append(max(0.0, now - s.ready_s)
+                                if np.isfinite(s.ready_s) else 0.0)
+        s.state = SessionState.PREFILLING
+        job = Job(session_id=s.session_id, phase=adm.phase,
+                  new_len=s.remaining_prefill, arrival_s=now)
+        if adm.to_decode_queue:
+            self.queues.q_decode.append(job)
+        else:
+            job.enqueued_cold = adm.phase == Phase.RESUME_PREFILL
+            self.queues.q_prefill.append(job)
+
+    # ------------------------------------------------------------------
+    # plan execution: preemption (PriorityPlanner)
+    # ------------------------------------------------------------------
+    def _preempt_prefill(self, sid: int) -> None:
+        """Suspend a cold prefill at a chunk boundary: its KV rows stay
+        resident on device via the park machinery, the slot is freed,
+        and its queue entry is pulled (re-created on unsuspend)."""
+        s = self._sessions.get(sid)
+        if s is None or s.state != SessionState.PREFILLING or s.slot < 0:
+            return
+        self._parked[sid] = self.pool.park(s.slot)
+        s.slot = -1
+        s.state = SessionState.PREFILL_PAUSED
+        self._preempt_count += 1
+        self._paused_seq[sid] = self._preempt_count
+        jobs = [j for j in self.queues.q_prefill if j.session_id != sid]
+        self.queues.q_prefill.clear()
+        self.queues.q_prefill.extend(jobs)
+        self.hotpath_stats["preemptions"] += 1
+
+    def _unsuspend_prefill(self, sid: int, now: float) -> None:
+        """Resume a suspended cold prefill: unpark its snapshot into a
+        fresh slot (bit-identical state) and re-queue its job."""
+        s = self._sessions.get(sid)
+        if (s is None or s.state != SessionState.PREFILL_PAUSED
+                or self.pool.free_slots == 0):
+            return
+        s.slot = self.pool.alloc()
+        self.pool.unpark(s.slot, self._parked.pop(sid))
+        self._paused_seq.pop(sid, None)
+        s.state = SessionState.PREFILLING
+        self.queues.q_prefill.append(Job(
+            session_id=sid, phase=Phase.COLD_PREFILL,
+            new_len=s.remaining_prefill, arrival_s=now))
+        self.hotpath_stats["preempt_resumes"] += 1
+
+    # ------------------------------------------------------------------
+    # plan execution: resume prefills (batched, fused into decode)
+    # ------------------------------------------------------------------
+    def _exec_resume(self, rp: ResumePlan) -> bool:
+        """Pack the planned resume jobs from Q_D into one [M, bucket]
+        executable with per-row slots/lengths.  Stale entries scanned on
+        the way are dropped; on plan/queue divergence (replay of a
+        diverged run) the batch rounds down to a warmed size."""
         qd = self.queues.q_decode
+        want = list(rp.session_ids)
         jobs: List[Tuple[Job, Session]] = []
-        while qd and len(jobs) < self._resume_levels[-1]:
+        while qd and len(jobs) < len(want):
             job = qd.popleft()
-            s = self._sessions[job.session_id]
-            if s.state == SessionState.PREFILLING and s.remaining_prefill > 0:
-                jobs.append((job, s))
+            s = self._sessions.get(job.session_id)
+            if (s is None or s.state != SessionState.PREFILLING
+                    or s.remaining_prefill <= 0):
+                continue                 # stale entry: dropped
+            if job.session_id != want[len(jobs)]:
+                qd.appendleft(job)       # diverged from the plan: stop
+                break
+            jobs.append((job, s))
         if not jobs:
             return False
-        m = max(lv for lv in self._resume_levels if lv <= len(jobs))
-        for job, _ in reversed(jobs[m:]):
-            qd.appendleft(job)           # untouched leftovers keep order
-        jobs = jobs[:m]
+        if len(jobs) < len(want):
+            lvls = [lv for lv in self._resume_levels if lv <= len(jobs)]
+            if not lvls:
+                for job, _ in reversed(jobs):
+                    qd.appendleft(job)
+                return False
+            m = max(lvls)
+            for job, _ in reversed(jobs[m:]):
+                qd.appendleft(job)
+            jobs = jobs[:m]
+        unfinished = self._dispatch_prefill_batch(jobs, rp.bucket,
+                                                  count_overruns=False)
+        self.hotpath_stats["resume_batches"] += 1
+        self.hotpath_stats["resume_jobs"] += len(jobs)
+        for job, _ in unfinished:
+            qd.append(job)               # continue next cycle
+        return True
 
-        takes, bucket = [], self._buckets[0]
-        for _, s in jobs:
-            aligned = self._aligned_remaining(s)
-            bucket = max(bucket, self._bucket_for(max(aligned, 1)))
-            takes.append(aligned)
-        takes = [min(t, bucket) for t in takes]
+    def _dispatch_prefill_batch(self, jobs: List[Tuple[Job, Session]],
+                                bucket: int, *, count_overruns: bool,
+                                cold_pack: int = 0,
+                                ) -> List[Tuple[Job, Session]]:
+        """Shared [M, bucket] batched-prefill dispatch for resume
+        batches and cold packs: assemble per-row tokens/slots/lengths,
+        grow block tables, run the batched executable, advance the host
+        mirrors, register prefixes and finish completed prefills.
+        Returns the (job, session) pairs still mid-prefill — callers
+        requeue those per their queue discipline."""
+        m = len(jobs)
+        takes = []
         toks = np.zeros((m, bucket), np.int32)
         for i, (_, s) in enumerate(jobs):
-            row = s.current_turn.prefill_tokens[
-                s.prefill_done: s.prefill_done + takes[i]]
-            toks[i, :takes[i]] = row
+            take = min(bucket, self._aligned_remaining(s))
+            takes.append(take)
+            toks[i, :take] = s.current_turn.prefill_tokens[
+                s.prefill_done: s.prefill_done + take]
+            if (count_overruns and self.pool.lengths[s.slot] + take
+                    > self.ecfg.max_seq - 1):
+                self.hotpath_stats["capacity_overruns"] += 1
         slots = np.asarray([s.slot for _, s in jobs], np.int32)
         lens = np.asarray([self.pool.lengths[s.slot] for _, s in jobs],
                           np.int32)
@@ -797,11 +997,10 @@ class ServingEngine:
             jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx),
             *self._bt())
         self.pool.cache = new_cache
-        self.hotpath_stats["resume_batches"] += 1
-        self.hotpath_stats["resume_jobs"] += m
-        self._note_prefill_dispatch(lens, bucket)
+        self._note_prefill_dispatch(lens, bucket, cold_pack=cold_pack)
 
         np_logits: Optional[np.ndarray] = None
+        unfinished: List[Tuple[Job, Session]] = []
         for i, (job, s) in enumerate(jobs):
             self.pool.lengths[s.slot] += takes[i]
             s.prefill_done += takes[i]
@@ -812,64 +1011,93 @@ class ServingEngine:
                     np_logits = np.asarray(logits)
                 self._finish_prefill(s, np_logits[i])
             else:
-                qd.append(job)           # continue next cycle
+                unfinished.append((job, s))
+        return unfinished
+
+    # ------------------------------------------------------------------
+    # plan execution: prefill stream
+    # ------------------------------------------------------------------
+    def _drop_stale_prefill_heads(self) -> None:
+        qp = self.queues.q_prefill
+        while qp:
+            s = self._sessions.get(qp[0].session_id)
+            if s is not None and s.state == SessionState.PREFILLING:
+                return
+            qp.popleft()                 # drop stale entries at the head
+
+    def _take_prefill_job(self, sid: int) -> Optional[Tuple[Job, Session]]:
+        """Remove and return ``sid``'s live Q_P entry (None when absent
+        or stale — the planner's view raced a state change)."""
+        qp = self.queues.q_prefill
+        for i, job in enumerate(qp):
+            if job.session_id == sid:
+                s = self._sessions.get(sid)
+                if s is None or s.state != SessionState.PREFILLING:
+                    return None
+                del qp[i]
+                return job, s
+        return None
+
+    def _resolve_cold_fn(self, op: ColdOp, slot_exec) -> Optional[Callable]:
+        if op.fn_src == "slot":
+            return slot_exec["fn"] if slot_exec else None
+        if op.fn_src == "slot_full":
+            # opportunistic reclaim: bind the full-budget slot (the
+            # No-Green path pays on-demand construction here)
+            full_exec, _ = self.slots.bind(self.scheduler.cfg.r_base)
+            return full_exec["fn"]
+        if op.fn_src == "tuned":
+            return self._chunk_fns.get(op.shape)
+        return None                      # shared batch-1 prefill
+
+    def _exec_cold_op(self, op: ColdOp, slot_exec) -> bool:
+        qp = self.queues.q_prefill
+        if op.kind == "pack":
+            return self._exec_cold_pack(op)
+        got = self._take_prefill_job(op.session_ids[0])
+        if got is None:
+            return False
+        job, s = got
+        if s.remaining_prefill == 0:
+            # unreachable with our workloads (shared prefix < full prompt);
+            # would require a last-token re-run that is unsafe for SSM state
+            raise RuntimeError("fully-cached request needs >=1 new token")
+        if op.kind == "whole":
+            # llama.cpp-style: run the entire prompt to completion now
+            while s.state == SessionState.PREFILLING:
+                self._run_prefill_tokens(s, op.shape)
+            return True
+        fn = self._resolve_cold_fn(op, slot_exec)
+        for _ in range(op.reps):
+            if s.state != SessionState.PREFILLING:
+                break
+            self._run_prefill_tokens(s, op.shape, fn=fn)
+        if s.state == SessionState.PREFILLING:
+            qp.appendleft(job)           # unfinished: stays at the head
         return True
 
-    # ------------------------------------------------------------------
-    # admission
-    # ------------------------------------------------------------------
-    def _admit(self) -> None:
-        now = self._clock()
-        for s in self._sessions.values():
-            if s.state == SessionState.WAITING_PREFILL and s.ready_s <= now:
-                if self.pool.free_slots == 0:
-                    continue  # backpressure: retry next cycle
-                s.slot = self.pool.alloc()
-                self._maybe_restore_prefix(s)
-                self._submit(s, now)
-            elif s.state == SessionState.TOOL_CALL and s.ready_s <= now:
-                if s.slot < 0:
-                    # parked during TOOL_WAIT (release-under-pressure
-                    # policy): needs a fresh slot + a lossless restore
-                    # before its resume prefill may run
-                    if self.pool.free_slots == 0:
-                        continue  # backpressure: retry next cycle
-                    s.slot = self.pool.alloc()
-                    self.pool.unpark(s.slot,
-                                     self._parked.pop(s.session_id))
-                    self.hotpath_stats["unparks"] += 1
-                self._submit(s, now)
-
-    def _maybe_restore_prefix(self, s: Session) -> None:
-        if s.shared_prefix_len <= 0:
-            return
-        entry = self.pool.lookup(
-            s.turns[0].prefill_tokens[:s.shared_prefix_len])
-        if entry is not None:
-            self.pool.restore_prefix(s.slot, entry)
-            s.cached_len = entry.length
-            s.prefill_done = entry.length
-
-    def _submit(self, s: Session, now: float) -> None:
-        s.arrival_s = now
-        s.request_arrivals.append(now)
-        # queue delay: how long the request sat ready (slot/backpressure
-        # wait) before admission — the open-loop breakdown metric
-        s.queue_delays_s.append(max(0.0, now - s.ready_s)
-                                if np.isfinite(s.ready_s) else 0.0)
-        s.state = SessionState.PREFILLING
-        new_len = s.remaining_prefill
-        if self.policy.split_phases:
-            phase = classify(s.total_prompt_len, s.cached_len, new_len,
-                             self.thresholds)
-        else:
-            phase = Phase.COLD_PREFILL  # phase-blind baseline
-        job = Job(session_id=s.session_id, phase=phase, new_len=new_len,
-                  arrival_s=now)
-        if self.policy.resume_to_decode_queue:
-            self.queues.enqueue(job)
-        else:
-            self.queues.q_prefill.append(job)
+    def _exec_cold_pack(self, op: ColdOp) -> bool:
+        """Pack the planned M prefills into one [M, bucket] batched
+        executable (the same machinery — and warmed shapes — as batched
+        resume).  Unfinished jobs return to the queue head in order."""
+        qp = self.queues.q_prefill
+        jobs: List[Tuple[Job, Session]] = []
+        for sid in op.session_ids:
+            got = self._take_prefill_job(sid)
+            if got is None:
+                continue
+            if got[1].remaining_prefill == 0:
+                # same loud invariant as the head-of-queue path: silently
+                # dropping the job would leak the slot and hang the session
+                raise RuntimeError("fully-cached request needs >=1 new token")
+            jobs.append(got)
+        if not jobs:
+            return False
+        unfinished = self._dispatch_prefill_batch(
+            jobs, op.shape, count_overruns=True, cold_pack=len(jobs))
+        for job, _ in reversed(unfinished):
+            qp.appendleft(job)           # continue next cycle, in order
+        return True
 
     # ------------------------------------------------------------------
     # reactor surface: attach / step / poll-state (DESIGN.md §6)
@@ -896,11 +1124,9 @@ class ServingEngine:
 
     def _begin(self) -> None:
         ecfg = self.ecfg
-        if not self.policy.adaptive:
-            self.scheduler.state.r_min = max(
-                ecfg.granularity,
-                int(self.policy.static_r_frac * ecfg.cycle_budget)
-                // ecfg.granularity * ecfg.granularity)
+        r = self.planner.static_r_min(ecfg.cycle_budget, ecfg.granularity)
+        if r is not None:
+            self.scheduler.state.r_min = r
         self._next_ctrl = self._clock() + ecfg.control_interval_s
 
     def pending(self) -> bool:
@@ -923,66 +1149,104 @@ class ServingEngine:
             raise ValueError(f"cannot detach live session {session_id} "
                              f"({s.state})")
         del self._sessions[session_id]
+        self._prefix_keys.pop(session_id, None)
+
+    def snapshot(self, now: Optional[float] = None) -> EngineView:
+        """The immutable ``EngineView`` the planner sees: queues,
+        session phases, control state, slot levels, KV pressure.  Built
+        fresh each cycle; the only pool interaction is the non-mutating
+        ``peek_prefix`` probe (the actual restore happens at dispatch)."""
+        if now is None:
+            now = self._clock()
+        svs = []
+        for s in self._sessions.values():
+            t = s.current_turn
+            hit = 0
+            if (s.state == SessionState.WAITING_PREFILL
+                    and s.ready_s <= now and s.shared_prefix_len > 0):
+                # the hash is cached per session: a backpressured cohort
+                # waiting on slots must not re-hash its prompts per cycle
+                key = self._prefix_keys.get(s.session_id)
+                if key is None:
+                    key = prefix_key(
+                        s.turns[0].prefill_tokens[:s.shared_prefix_len])
+                    self._prefix_keys[s.session_id] = key
+                hit = self.pool.peek_prefix_key(key)
+            svs.append(SessionView(
+                session_id=s.session_id, state=s.state.value, slot=s.slot,
+                turn_idx=s.turn_idx, num_turns=len(s.turns),
+                cached_len=s.cached_len, prefill_done=s.prefill_done,
+                turn_prefill_len=len(t.prefill_tokens) if t else 0,
+                decode_len=t.decode_len if t else 0, decoded=s.decoded,
+                shared_prefix_len=s.shared_prefix_len, ready_s=s.ready_s,
+                slo=s.slo_class, prefix_hit_len=hit,
+                paused_seq=self._paused_seq.get(s.session_id, -1)))
+        return EngineView(
+            now=now, next_ctrl=self._next_ctrl,
+            tpot_step_ms=self.scheduler.state.tpot_step_ms,
+            r_min=self.scheduler.state.r_min,
+            b_prefill=self.scheduler.state.b_prefill,
+            cycle_budget=self.ecfg.cycle_budget,
+            granularity=self.ecfg.granularity,
+            r_base=self.scheduler.cfg.r_base,
+            max_seq=self.ecfg.max_seq,
+            free_slots=self.pool.free_slots,
+            slot_lengths=tuple(int(x) for x in self.pool.lengths),
+            sessions=tuple(svs),
+            q_decode=tuple(JobView(j.session_id, j.phase, j.new_len)
+                           for j in self.queues.q_decode),
+            q_prefill=tuple(JobView(j.session_id, j.phase, j.new_len)
+                            for j in self.queues.q_prefill),
+            buckets=tuple(self._buckets),
+            resume_levels=tuple(self._resume_levels),
+            cold_levels=tuple(self._cold_levels),
+            megastep_levels=(tuple(self.megasteps.levels)
+                             if self.megasteps is not None else ()),
+            chunk_tok_s=self._chunk_tok_s,
+            autotune=self.ecfg.autotune_chunks,
+            min_cached_fraction=self.thresholds.min_cached_fraction,
+            resume_max_new=self.thresholds.resume_max_new)
 
     def step(self) -> List[TokenEvent]:
-        """One reactor cycle — exactly the pre-refactor ``run()`` loop
-        body: admission, the control update + slot rebind, at most one
-        decode dispatch, batched resume prefills, and the budgeted
-        prefill-stream work.  Non-blocking apart from the sampled-
-        cadence decode flush.  Returns the token events this cycle
-        emitted (``last_step_did_work`` tells idle-sleep callers whether
-        anything was dispatched)."""
-        policy, ecfg = self.policy, self.ecfg
+        """One reactor cycle, plan → execute: the planner decides the
+        control update, admissions/routing, the slot level, the decode
+        dispatch (and megastep K), the resume-batch composition and the
+        cold-prefill chunk assignments from an immutable view; the
+        ``Dispatcher`` carries the plan out.  Non-blocking apart from
+        the sampled-cadence decode flush.  Returns the token events this
+        cycle emitted (``last_step_did_work`` tells idle-sleep callers
+        whether anything was dispatched)."""
+        ecfg = self.ecfg
         now = self._clock()
-        self._admit()
 
-        # ---- control update + slot rebind (Algorithm 1) ----------
-        if now >= self._next_ctrl:
+        # ---- control update (Algorithm 1) -------------------------
+        ctrl = self.planner.plan_control(now, self._next_ctrl)
+        if ctrl.flush:
             self._flush_decode()         # fresh TPOT for the controller
-            if policy.adaptive:
+            if ctrl.update:
                 self.scheduler.update()
             self._next_ctrl = now + ecfg.control_interval_s
-        slot_exec, level = self.slots.bind(self.scheduler.state.r_min)
 
-        sessions = self._sessions.values()
-        active = [s for s in sessions if s.state == SessionState.DECODING]
-        q_d, q_p = self.queues.occupancy()
-
-        did_work = False
-        # ---- decode stream ----------------------------------------
-        allow_decode = policy.protect_decode or q_p == 0
-        if active and allow_decode:
-            self._decode_dispatch(active, now, self._next_ctrl, q_d, q_p)
-            did_work = True
-        elif not active:
-            self._flush_decode()
-            self._window_t0 = None
-
-        # ---- resume prefills fused into the decode stream --------
-        if policy.resume_to_decode_queue and self.queues.q_decode:
-            did_work |= self._resume_batch_step()
-
-        # ---- prefill stream (cold / over-budget / phase-blind) ----
-        did_work |= self._prefill_stream_step(slot_exec)
-        if not active and self.queues.q_prefill and policy.chunk_by_slots:
-            # opportunistic reclaim (paper §III-C): no decode demand,
-            # so the prefill stream claims the full cycle budget
-            full_exec, _ = self.slots.bind(self.scheduler.cfg.r_base)
-            for _ in range(3):
-                if (self.queues.q_prefill
-                        and not any(s.state == SessionState.DECODING
-                                    for s in sessions)):
-                    self._prefill_stream_step(full_exec)
-                else:
-                    break
+        # ---- plan → execute ---------------------------------------
+        view = self.snapshot(now)
+        plan = dataclasses.replace(self.planner.plan(view), control=ctrl)
+        events_before = len(self._events)
+        outcome = self.dispatcher.execute(plan, now)
 
         if len(self.trace) < ecfg.trace_max:
             self.trace.append(dict(
                 t=self._clock(), tpot_ms=self.scheduler.state.tpot_step_ms,
                 r_min=self.scheduler.state.r_min,
                 b_prefill=self.scheduler.state.b_prefill,
-                q_d=q_d, q_p=q_p, active=len(active)))
-        self.last_step_did_work = did_work
+                q_d=outcome.q_d, q_p=outcome.q_p,
+                q_p_cold=outcome.q_p_cold, q_p_resume=outcome.q_p_resume,
+                active=outcome.active))
+        self.journal.record(CycleRecord(
+            cycle=self._cycle, plan=plan,
+            events=len(self._events) - events_before,
+            did_work=outcome.did_work))
+        self._cycle += 1
+        self.last_step_did_work = outcome.did_work
         events, self._events = self._events, []
         return events
 
@@ -1045,6 +1309,7 @@ class ServingEngine:
     def run(self, sessions: Sequence[Session],
             thresholds: Optional[SLOThresholds] = None) -> ServingReport:
         self._sessions = {}
+        self._prefix_keys.clear()
         for s in sessions:
             self.attach(s)
         self._t0 = time.perf_counter()
@@ -1073,133 +1338,3 @@ class ServingEngine:
         extra.update({k: float(v) for k, v in self.hotpath_stats.items()})
         return build_report(self.policy.name, list(sessions), wall,
                             thresholds, extra)
-
-    # ------------------------------------------------------------------
-    def _bucket_for(self, n: int) -> int:
-        for b in self._buckets:
-            if b >= n:
-                return b
-        return self._buckets[-1]
-
-    def _prefill_stream_step(self, slot_exec) -> bool:
-        qp = self.queues.q_prefill
-        while qp and (self._sessions[qp[0].session_id].state
-                      != SessionState.PREFILLING):
-            qp.popleft()                 # drop stale entries at the head
-        if not qp:
-            return False
-        s = self._sessions[qp[0].session_id]
-        if s.remaining_prefill == 0:
-            # unreachable with our workloads (shared prefix < full prompt);
-            # would require a last-token re-run that is unsafe for SSM state
-            raise RuntimeError("fully-cached request needs >=1 new token")
-        if self.policy.whole_prefill:
-            # llama.cpp-style: run the entire prompt to completion now
-            bucket = self._buckets[-1]
-            while s.state == SessionState.PREFILLING:
-                self._run_prefill_tokens(s, bucket)
-            qp.popleft()
-            return True
-        if self.policy.chunk_by_slots:
-            budget, bound_fn = slot_exec["chunk"], slot_exec["fn"]
-        else:
-            budget, bound_fn = self._fixed_chunk(), None
-        if budget <= 0:
-            return False
-        if self._cold_pack_step(budget):
-            return True
-        chunk, fn, reps = self._tuned_chunk(budget, bound_fn)
-        for _ in range(reps):
-            if s.state != SessionState.PREFILLING:
-                break
-            self._run_prefill_tokens(s, chunk, fn=fn)
-        if s.state != SessionState.PREFILLING:
-            qp.popleft()
-        return True
-
-    def _cold_pack_step(self, budget: int) -> bool:
-        """Pack the first M pending prefills from Q_P into one
-        [M, bucket] batched executable (the same machinery — and warmed
-        shapes — as batched resume), with bucket·M ≤ the cycle's prefill
-        budget so decode protection is unchanged.  Leftover and
-        unfinished jobs return to the queue head in order."""
-        qp = self.queues.q_prefill
-        if not self._cold_levels:
-            return False
-        jobs: List[Tuple[Job, Session]] = []
-        while qp and len(jobs) < self._cold_levels[-1]:
-            job = qp.popleft()
-            s = self._sessions[job.session_id]
-            if s.state != SessionState.PREFILLING:
-                continue                 # stale entry: drop, as the head does
-            if s.remaining_prefill == 0:
-                # same loud invariant as the head-of-queue path: silently
-                # dropping the job would leak the slot and hang the session
-                raise RuntimeError("fully-cached request needs >=1 new token")
-            jobs.append((job, s))
-        m = bucket = None
-        if len(jobs) >= 2:
-            for lv in reversed(self._cold_levels):    # largest M first
-                if lv <= len(jobs):
-                    b = self._bucket_down(budget // lv)
-                    if b is not None:
-                        # don't dispatch a bigger shape than the packed
-                        # jobs can fill (same cap as _resume_batch_step)
-                        need = max(self._aligned_remaining(s)
-                                   for _, s in jobs[:lv])
-                        m, bucket = lv, min(b, self._bucket_for(need))
-                        break
-        if m is None:
-            for job, _ in reversed(jobs):
-                qp.appendleft(job)       # no viable pack: restore order
-            return False
-        for job, _ in reversed(jobs[m:]):
-            qp.appendleft(job)           # untouched leftovers keep order
-        jobs = jobs[:m]
-
-        takes = []
-        toks = np.zeros((m, bucket), np.int32)
-        for i, (_, s) in enumerate(jobs):
-            take = min(bucket, self._aligned_remaining(s))
-            takes.append(take)
-            toks[i, :take] = s.current_turn.prefill_tokens[
-                s.prefill_done: s.prefill_done + take]
-            if self.pool.lengths[s.slot] + take > self.ecfg.max_seq - 1:
-                self.hotpath_stats["capacity_overruns"] += 1
-        slots = np.asarray([s.slot for _, s in jobs], np.int32)
-        lens = np.asarray([self.pool.lengths[s.slot] for _, s in jobs],
-                          np.int32)
-        logit_idx = np.asarray([t - 1 for t in takes], np.int32)
-
-        for i, (_, s) in enumerate(jobs):
-            self._prepare_append(s.slot, takes[i])
-        logits, new_cache = self._ex.resume(
-            self.params, self.pool.cache, jnp.asarray(toks),
-            jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx),
-            *self._bt())
-        self.pool.cache = new_cache
-        self._note_prefill_dispatch(lens, bucket, cold_pack=m)
-
-        np_logits: Optional[np.ndarray] = None
-        for i, (job, s) in enumerate(jobs):
-            self.pool.lengths[s.slot] += takes[i]
-            s.prefill_done += takes[i]
-            s.cached_len = int(self.pool.lengths[s.slot])
-            self._maybe_register_prefix(s)
-            if s.remaining_prefill == 0:
-                if np_logits is None:
-                    np_logits = np.asarray(logits)
-                self._finish_prefill(s, np_logits[i])
-        for job, s in reversed(jobs):
-            if s.state == SessionState.PREFILLING:
-                qp.appendleft(job)       # continue next cycle, in order
-        return True
-
-    def _bucket_down(self, n: int) -> Optional[int]:
-        """Largest warmed token bucket ≤ n, or None when n is below the
-        smallest bucket."""
-        best = None
-        for b in self._buckets:
-            if b <= n:
-                best = b
-        return best

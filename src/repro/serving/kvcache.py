@@ -48,6 +48,11 @@ def _prefix_key(tokens: np.ndarray) -> str:
                         .tobytes()).hexdigest()
 
 
+# Public alias: callers that probe repeatedly (the planner view builds
+# one probe per waiting session per cycle) hash once and peek by key.
+prefix_key = _prefix_key
+
+
 # One executable per cache pytree structure/shape (jit keys on both), so
 # a prefix restore is a single fused scatter dispatch instead of one
 # ``.at[].set`` dispatch per leaf — O(copy), not O(dispatch·leaves).
@@ -163,6 +168,20 @@ class KVCachePool:
         self._prefix[key] = PrefixEntry(
             snapshot=_fused_snapshot(self.cache, jnp.int32(slot)),
             length=len(tokens), last_used=self._tick)
+
+    def peek_prefix(self, tokens: np.ndarray) -> int:
+        """Non-mutating probe: length of the cached prefix for these
+        tokens (0 = miss).  No hit/miss stats, no LRU refresh — the
+        planner's ``EngineView`` must not perturb cache recency; the
+        actual ``lookup``/``restore_prefix`` happens at dispatch."""
+        return self.peek_prefix_key(_prefix_key(tokens))
+
+    def peek_prefix_key(self, key: str) -> int:
+        """``peek_prefix`` for a pre-computed ``prefix_key`` — the
+        engine caches the key per session so a waiting session costs no
+        re-hash per cycle."""
+        entry = self._prefix.get(key)
+        return entry.length if entry is not None else 0
 
     def lookup(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
         entry = self._prefix.get(_prefix_key(tokens))

@@ -1,9 +1,15 @@
 """Scheduling policies: AgentServe + the paper's three baselines + the
-two ablations (§IV-A Baselines, §IV-D Ablation).
+two ablations (§IV-A Baselines, §IV-D Ablation) + the SLO-class
+extension.
 
 Every policy runs on the *same* engine machinery (same executables, same
 KV pool, same workload) so measured differences come from scheduling
 decisions only — the fairest single-substrate comparison we can make.
+Since the plan-based refactor (DESIGN.md §9) each policy's decisions
+live in one pure ``CyclePlanner`` class (``core/planner.py``), consumed
+identically by the real engine and the fluid simulator; the
+``PolicySpec`` here carries its tunables plus the construction-time
+knobs (which executable shapes to warm, pre-establish or not).
 
   agentserve — phase split, resume prefills fused into the decode stream
                under B_prefill(t), cold prefills chunked into the
@@ -19,27 +25,27 @@ decisions only — the fairest single-substrate comparison we can make.
   fcfs       — llama.cpp-style: strict arrival order; a prefill runs to
                completion before any decode step proceeds (the
                head-of-line blocking baseline).
+  no_alg     — agentserve minus Algorithm 1 (static partition).
   no_green   — agentserve minus pre-established slots: every partition
                change constructs its executable on demand *inside* the
                serving path.
+  priority   — agentserve plus SLO classes (interactive vs batch):
+               interactive arrivals preempt batch cold prefills at chunk
+               boundaries (KV stays resident via park/unpark).  The new
+               capability the planner layer exists to make cheap; not in
+               ``POLICIES`` (the paper's comparison set) but in
+               ``PLANNERS`` (everything servable).
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.core.planner import (CyclePlanner, PolicySpec,
+                                make_planner as _planner_from_spec)
 
-@dataclasses.dataclass(frozen=True)
-class PolicySpec:
-    name: str
-    adaptive: bool = False            # run Algorithm 1 feedback
-    split_phases: bool = False        # distinguish cold vs resume
-    resume_to_decode_queue: bool = False  # fuse in-budget resumes into Q_D
-    protect_decode: bool = True       # decode step every cycle
-    chunk_by_slots: bool = False      # prefill chunk = slot partition share
-    fixed_chunk_frac: float = 0.5     # when not slot-driven: share of budget
-    whole_prefill: bool = False       # fcfs: run prefill to completion
-    preestablish: bool = True         # pre-build slot executables
-    static_r_frac: float = 0.5        # static decode reservation share
+__all__ = ["PolicySpec", "POLICIES", "PLANNERS", "make_planner",
+           "AGENTSERVE", "PD_STATIC", "CHUNKED", "FCFS", "NO_ALG",
+           "NO_GREEN", "PRIORITY"]
 
 
 AGENTSERVE = PolicySpec(
@@ -65,5 +71,23 @@ NO_ALG = dataclasses.replace(AGENTSERVE, name="no_alg", adaptive=False)
 NO_GREEN = dataclasses.replace(AGENTSERVE, name="no_green",
                                preestablish=False)
 
+PRIORITY = dataclasses.replace(AGENTSERVE, name="priority")
+
+# The paper's comparison set (Fig 5/6/7).
 POLICIES = {p.name: p for p in
             [AGENTSERVE, PD_STATIC, CHUNKED, FCFS, NO_ALG, NO_GREEN]}
+
+# Everything the serving stack can run (launchers, gateway, sweeps).
+PLANNERS = {**POLICIES, PRIORITY.name: PRIORITY}
+
+
+def make_planner(policy) -> CyclePlanner:
+    """Resolve a policy name, a ``PolicySpec``, or a ready planner
+    instance (e.g. ``ReplayPlanner``) to a ``CyclePlanner``."""
+    if isinstance(policy, str):
+        policy = PLANNERS[policy]
+    if isinstance(policy, PolicySpec):
+        return _planner_from_spec(policy)
+    if hasattr(policy, "plan") and hasattr(policy, "plan_control"):
+        return policy
+    raise TypeError(f"not a policy name, PolicySpec or planner: {policy!r}")

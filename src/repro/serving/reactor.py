@@ -54,6 +54,7 @@ class HandleStatus(enum.Enum):
 _STATE_TO_STATUS = {
     SessionState.WAITING_PREFILL: HandleStatus.QUEUED,
     SessionState.PREFILLING: HandleStatus.PREFILL,
+    SessionState.PREFILL_PAUSED: HandleStatus.PREFILL,
     SessionState.DECODING: HandleStatus.DECODE,
     SessionState.TOOL_CALL: HandleStatus.TOOL_WAIT,
     SessionState.TOOL_WAIT: HandleStatus.TOOL_WAIT,

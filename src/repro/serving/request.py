@@ -11,6 +11,9 @@ import numpy as np
 class SessionState(enum.Enum):
     WAITING_PREFILL = "waiting_prefill"   # request submitted, not started
     PREFILLING = "prefilling"             # chunks in flight
+    PREFILL_PAUSED = "prefill_paused"     # cold prefill preempted by an
+    #                                       interactive-class arrival: KV
+    #                                       parked on device, slot freed
     DECODING = "decoding"
     TOOL_CALL = "tool_call"               # engine-clocked tool wait
     TOOL_WAIT = "tool_wait"               # gateway-clocked tool wait:
@@ -34,6 +37,7 @@ class Session:
     workload: str = "react"           # react | plan_execute
     shared_prefix_len: int = 0        # leading tokens shared across sessions
     external_tools: bool = False      # gateway owns the tool-wait clock
+    slo_class: str = "batch"          # interactive | batch (PriorityPlanner)
     # runtime state
     state: SessionState = SessionState.WAITING_PREFILL
     turn_idx: int = 0

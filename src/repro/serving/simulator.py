@@ -15,16 +15,24 @@ Two roles (DESIGN.md §2, §7.1):
 The simulator advances in control intervals Δt.  Per interval, decode
 work r·Δt·μ_D(R)/r... — rates are read off the profile at the current
 allocation; queues drain accordingly; TPOT is 1/per-stream decode rate.
+
+Policy semantics come from the **same ``CyclePlanner`` objects the real
+engine executes** (DESIGN.md §9) — whether the Algorithm-1 controller
+runs, the static partition for non-adaptive policies, and the prefill
+service order (phase split / FCFS / SLO classes) are all read off the
+planner, so the engine and the simulator cannot drift.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.competitive import ThroughputProfile
+from repro.core.planner import CyclePlanner
 from repro.core.scheduler import SchedulerConfig, TPOTScheduler
+from repro.serving.policies import make_planner
 
 
 @dataclasses.dataclass
@@ -32,6 +40,7 @@ class SimSession:
     cold_len: int
     turns: List[dict]                # {resume_len, decode_len, tool_s}
     arrival_s: float = 0.0
+    slo_class: str = "batch"         # interactive | batch (priority)
     # state
     phase: str = "cold"              # cold | resume | decode | tool | done
     turn_idx: int = 0
@@ -40,6 +49,24 @@ class SimSession:
     ttfts: List[float] = dataclasses.field(default_factory=list)
     req_arrival: float = 0.0
     tpots: List[float] = dataclasses.field(default_factory=list)
+    # fractional decode tokens carried between intervals: slow streams
+    # producing <0.5 tok per dt must still accumulate TPOT samples
+    tpot_credit: float = 0.0
+
+    def emit_tpots(self, produced: float, per_stream: float,
+                   final: bool = False) -> None:
+        """Accumulate ``produced`` decoded tokens and record one TPOT
+        sample per *whole* token crossed (fractional remainder carries
+        to the next interval; ``final`` flushes it at burst end)."""
+        self.tpot_credit += produced
+        n = int(self.tpot_credit)
+        if final:
+            n = int(round(self.tpot_credit))
+        if n > 0:
+            self.tpots.extend([1.0 / max(per_stream, 1e-9)] * n)
+            self.tpot_credit -= n
+        if final:
+            self.tpot_credit = 0.0
 
 
 def sessions_from_workload(ws, time_origin: float = 0.0) -> List[SimSession]:
@@ -53,7 +80,8 @@ def sessions_from_workload(ws, time_origin: float = 0.0) -> List[SimSession]:
             turns=[dict(resume_len=0,
                         decode_len=s.turns[0].decode_len,
                         tool_s=s.turns[0].tool_latency_s)] + turns,
-            arrival_s=s.ready_s))
+            arrival_s=s.ready_s,
+            slo_class=getattr(s, "slo_class", "batch")))
     return out
 
 
@@ -77,20 +105,27 @@ class SimResult:
 
 
 def simulate(profile: ThroughputProfile, sessions: Sequence[SimSession], *,
-             policy: str = "agentserve", tpot_slo_ms: float = 50.0,
-             dt: float = 0.05, static_r_frac: float = 0.5,
+             planner: Union[CyclePlanner, str] = "agentserve",
+             tpot_slo_ms: float = 50.0, dt: float = 0.05,
+             static_r_frac: Optional[float] = None,
              eps_ctx: float = 0.0, max_t: float = 300.0) -> SimResult:
     """Spatial-concurrency simulation.  Decode holds R(t) of S; prefill
-    holds S - R(t) *simultaneously* (the GPU Green-Context semantics)."""
+    holds S - R(t) *simultaneously* (the GPU Green-Context semantics).
+
+    ``planner`` is the same ``CyclePlanner`` the engine would execute
+    (or a registered policy name); ``static_r_frac`` overrides the
+    spec's static partition for non-adaptive sweeps."""
+    planner = make_planner(planner)
     S = float(profile.levels[-1])
     g = float(profile.levels[0])
     sched = TPOTScheduler(SchedulerConfig(
         total_resources=int(S), r_base=int(g), r_init=int(2 * g),
         delta_r=int(g), tpot_slo_ms=tpot_slo_ms, control_interval_s=dt))
-    adaptive = policy in ("agentserve",)
-    split = policy in ("agentserve", "pd_static")
+    adaptive = planner.adaptive
     if not adaptive:
-        sched.state.r_min = int(static_r_frac * S)
+        frac = (planner.spec.static_r_frac if static_r_frac is None
+                else static_r_frac)
+        sched.state.r_min = int(frac * S)
 
     t = 0.0
     prefill_served = 0.0
@@ -133,8 +168,9 @@ def simulate(profile: ThroughputProfile, sessions: Sequence[SimSession], *,
             sched.record_decode_step(dt, steps=max(rounds, 1e-9))
             for s in dec_q:
                 produced = per_stream * dt
-                s.tpots.extend([1.0 / max(per_stream, 1e-9)]
-                               * int(round(min(produced, s.work_left))))
+                done = produced >= s.work_left
+                s.emit_tpots(min(produced, s.work_left), per_stream,
+                             final=done)
                 s.work_left -= produced
                 if s.work_left <= 0:
                     s.turn_idx += 1
@@ -145,14 +181,16 @@ def simulate(profile: ThroughputProfile, sessions: Sequence[SimSession], *,
                         s.ready_s = t + s.turns[s.turn_idx - 1]["tool_s"]
 
         # ---- prefill partition (concurrent!) --------------------------
-        # resume prefills first if the policy splits phases
-        order = (res_q + cold_q) if split else sorted(
-            res_q + cold_q, key=lambda s: s.req_arrival)
+        # service order is the planner's call (phase split / FCFS / SLO)
+        order = planner.sim_prefill_order(
+            res_q, cold_q, arrival=lambda s: s.req_arrival,
+            slo=lambda s: s.slo_class)
+        cold_set = set(map(id, cold_q))
         time_left = (1.0 - eps_ctx) * dt
         for s in order:
             if time_left <= 0:
                 break
-            mu = profile.mu_p(Rp, 1.0 if s in cold_q else 0.0)
+            mu = profile.mu_p(Rp, 1.0 if id(s) in cold_set else 0.0)
             can = mu * time_left
             use = min(can, s.work_left)
             prefill_served += use

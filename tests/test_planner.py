@@ -1,0 +1,423 @@
+"""Plan-based scheduling core (DESIGN.md §9).
+
+Three layers of coverage:
+
+1. **Pure planner tests** — policy invariants asserted directly on
+   ``CyclePlan``s produced from synthetic ``EngineView``s: no engine,
+   no device, microseconds per case.
+2. **Preemptive SLO-class scheduling** — the ``priority`` planner
+   end-to-end on the real engine: an interactive arrival preempts a
+   batch cold prefill (KV parked on device), beats FCFS on interactive
+   TTFT, and the preempted session still completes token-identically.
+3. **Journal record/replay** — a recorded run's plans re-executed
+   through the dispatcher reproduce the token events deterministically.
+"""
+import dataclasses
+
+import jax
+import pytest
+from _serving_util import events_by_session, oracle_streams
+
+from repro.configs.base import ModelConfig
+from repro.core.phases import Phase
+from repro.core.planner import (EngineView, JobView, PlanJournal,
+                                ReplayPlanner, SessionView, make_planner)
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.policies import PLANNERS, POLICIES
+from repro.serving.request import SessionState
+from repro.serving.workload import make_workload
+
+TINY = ModelConfig(name="tiny-planner", family="dense", num_layers=2,
+                   d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                   vocab_size=128, tie_embeddings=True, source="test")
+
+
+# ---------------------------------------------------------------------------
+# synthetic-view helpers
+# ---------------------------------------------------------------------------
+
+def mksv(sid, state, **kw):
+    base = dict(session_id=sid, state=state, slot=-1, turn_idx=0,
+                num_turns=3, cached_len=0, prefill_done=0,
+                turn_prefill_len=200, decode_len=8, decoded=0,
+                shared_prefix_len=0, ready_s=0.0)
+    base.update(kw)
+    return SessionView(**base)
+
+
+def mkview(**kw):
+    base = dict(now=10.0, next_ctrl=10.05, tpot_step_ms=5.0, r_min=16,
+                b_prefill=32, cycle_budget=80, granularity=8, r_base=8,
+                max_seq=512, free_slots=2, slot_lengths=(0, 0, 0, 0),
+                sessions=(), q_decode=(), q_prefill=(),
+                buckets=(8, 16, 32, 64, 128), resume_levels=(1, 2, 4),
+                cold_levels=(2, 4), megastep_levels=(2, 4, 6, 8),
+                chunk_tok_s={}, autotune=True)
+    base.update(kw)
+    return EngineView(**base)
+
+
+def job(sid, phase=Phase.COLD_PREFILL, new_len=200):
+    return JobView(session_id=sid, phase=phase, new_len=new_len)
+
+
+# ---------------------------------------------------------------------------
+# pure planner tests (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def test_fcfs_never_interleaves_decode_under_prefill():
+    """HOL blocking is FCFS's defining behaviour: with any prefill in
+    flight the plan contains no decode dispatch; the queue head runs to
+    completion instead."""
+    p = make_planner(POLICIES["fcfs"])
+    view = mkview(
+        sessions=(mksv(0, "decoding", slot=0, decoded=2),
+                  mksv(1, "prefilling", slot=1, prefill_done=40)),
+        q_prefill=(job(1, new_len=160),), free_slots=2)
+    plan = p.plan(view)
+    assert plan.decode is None
+    assert len(plan.prefill) == 1 and plan.prefill[0].kind == "whole"
+    assert plan.prefill[0].session_ids == (1,)
+    # with the prefill queue empty, decode proceeds
+    plan2 = p.plan(mkview(sessions=(mksv(0, "decoding", slot=0),)))
+    assert plan2.decode is not None and plan2.decode.session_ids == (0,)
+
+
+def test_fcfs_routes_everything_to_prefill_queue():
+    p = make_planner(POLICIES["fcfs"])
+    view = mkview(sessions=(
+        mksv(0, "tool_call", slot=0, cached_len=300, turn_prefill_len=8,
+             turn_idx=1, ready_s=0.0),))
+    plan = p.plan(view)
+    assert len(plan.admissions) == 1
+    assert not plan.admissions[0].to_decode_queue
+
+
+def test_pd_static_never_changes_partition():
+    """pd_static's partition is frozen: the controller never updates and
+    the bound slot level is the quantised static point, whatever the
+    view's TPOT says."""
+    p = make_planner(POLICIES["pd_static"])
+    assert p.static_r_min(80, 8) == 40          # 0.5 * C on the grid
+    for now, next_ctrl, tpot in [(0.0, 1.0, 5.0), (2.0, 1.0, 500.0)]:
+        assert not p.plan_control(now, next_ctrl).update
+    levels = {p.plan(mkview(r_min=40, tpot_step_ms=t)).slot_level
+              for t in (1.0, 50.0, 500.0)}
+    assert levels == {40}
+    # resumes are never fused into the decode queue
+    view = mkview(r_min=40, sessions=(
+        mksv(0, "tool_call", slot=0, cached_len=300, turn_prefill_len=8,
+             turn_idx=1),))
+    plan = p.plan(view)
+    assert plan.admissions and not plan.admissions[0].to_decode_queue
+    assert plan.admissions[0].phase == Phase.RESUME_PREFILL  # still split
+
+
+def test_chunked_never_exceeds_fixed_budget():
+    """The chunked baseline's scheduled prefill work per cycle is capped
+    by its fixed chunk budget — for the plain chunk path, the autotuned
+    path, and the packed path."""
+    p = make_planner(POLICIES["chunked"])
+    budget = int(0.5 * 80) // 8 * 8             # fixed_chunk_frac * C
+    views = [
+        mkview(sessions=(mksv(0, "prefilling", slot=0),),
+               q_prefill=(job(0),)),
+        mkview(sessions=(mksv(0, "prefilling", slot=0),),
+               q_prefill=(job(0),),
+               chunk_tok_s={16: 100.0, 32: 900.0, 64: 950.0}),
+        mkview(sessions=(mksv(0, "prefilling", slot=0),
+                         mksv(1, "prefilling", slot=1)),
+               q_prefill=(job(0), job(1))),
+    ]
+    for view in views:
+        for op in p.plan(view).prefill:
+            if op.kind == "pack":
+                assert op.shape * len(op.session_ids) <= budget
+            else:
+                assert op.shape * op.reps <= budget
+            assert not op.reclaim                # no slot reclaim either
+
+
+def test_agentserve_isolation_and_budget_routing():
+    """Cold prefills never enter Q_D; resumes split on B_prefill."""
+    p = make_planner(POLICIES["agentserve"])
+    cold = mksv(0, "waiting_prefill", turn_prefill_len=300)
+    small_resume = mksv(1, "tool_call", slot=1, cached_len=300,
+                        turn_prefill_len=8, turn_idx=1)
+    big_resume = mksv(2, "tool_call", slot=2, cached_len=300,
+                      turn_prefill_len=120, turn_idx=2)
+    plan = p.plan(mkview(b_prefill=32, free_slots=4,
+                         sessions=(cold, small_resume, big_resume)))
+    routed = {a.session_id: a for a in plan.admissions}
+    assert not routed[0].to_decode_queue
+    assert routed[0].phase == Phase.COLD_PREFILL
+    assert routed[1].to_decode_queue            # 8 <= B_prefill
+    assert not routed[2].to_decode_queue        # 120 > B_prefill
+    assert routed[2].phase == Phase.RESUME_PREFILL
+
+
+def test_agentserve_megastep_only_when_queues_empty():
+    p = make_planner(POLICIES["agentserve"])
+    dec = (mksv(0, "decoding", slot=0, decoded=1, decode_len=20),)
+    quiet = p.plan(mkview(sessions=dec, tpot_step_ms=1.0,
+                          next_ctrl=10.05, now=10.0))
+    assert quiet.decode.megastep_target > 1     # fuse up to the boundary
+    busy = p.plan(mkview(sessions=dec + (
+        mksv(1, "prefilling", slot=1),), q_prefill=(job(1),)))
+    assert busy.decode is not None
+    assert busy.decode.megastep_target == 0     # queues non-empty
+
+
+def test_agentserve_admission_respects_free_slots():
+    p = make_planner(POLICIES["agentserve"])
+    waiting = tuple(mksv(i, "waiting_prefill") for i in range(4))
+    plan = p.plan(mkview(sessions=waiting, free_slots=2))
+    assert len(plan.admissions) == 2            # backpressure on the rest
+    assert [a.session_id for a in plan.admissions] == [0, 1]
+
+
+def test_priority_preempts_cold_under_interactive_arrival():
+    """The tentpole capability at planner level: zero free slots + a
+    ready interactive arrival => the batch cold prefill with the most
+    remaining work is suspended and the interactive session admitted in
+    the same plan."""
+    p = make_planner(PLANNERS["priority"])
+    batch_a = mksv(0, "prefilling", slot=0, prefill_done=20,
+                   turn_prefill_len=300)
+    batch_b = mksv(1, "prefilling", slot=1, prefill_done=150,
+                   turn_prefill_len=300)
+    inter = mksv(2, "waiting_prefill", slo="interactive")
+    view = mkview(free_slots=0,
+                  sessions=(batch_a, batch_b, inter),
+                  q_prefill=(job(0, new_len=280), job(1, new_len=150)))
+    plan = p.plan(view)
+    assert plan.preempt == (0,)                 # most remaining work
+    admitted = [a.session_id for a in plan.admissions]
+    assert admitted == [2]                      # interactive got the slot
+    # without the interactive arrival: no preemption
+    calm = dataclasses.replace(view, sessions=(batch_a, batch_b))
+    assert p.plan(calm).preempt == ()
+    # batch arrivals never preempt
+    batch_arrival = dataclasses.replace(
+        view, sessions=(batch_a, batch_b, mksv(2, "waiting_prefill")))
+    assert p.plan(batch_arrival).preempt == ()
+    # cold-only invariant: an over-budget *resume* sitting in Q_P keeps
+    # its phase and is never a preemption victim
+    resume_only = dataclasses.replace(
+        view, q_prefill=(job(0, phase=Phase.RESUME_PREFILL, new_len=280),
+                         job(1, phase=Phase.RESUME_PREFILL, new_len=150)))
+    assert p.plan(resume_only).preempt == ()
+
+
+def test_priority_unsuspends_oldest_suspension_first():
+    p = make_planner(PLANNERS["priority"])
+    view = mkview(free_slots=1, sessions=(
+        mksv(0, "prefill_paused", paused_seq=7),    # suspended later...
+        mksv(1, "prefill_paused", paused_seq=3)))   # ...than this one
+    assert p.plan(view).unsuspend == (1,)
+
+
+def test_priority_resumes_suspended_when_pressure_clears():
+    p = make_planner(PLANNERS["priority"])
+    paused = mksv(0, "prefill_paused", prefill_done=20,
+                  turn_prefill_len=300)
+    plan = p.plan(mkview(free_slots=1, sessions=(paused,)))
+    assert plan.unsuspend == (0,)
+    # interactive demand outranks the suspended batch prefill
+    contended = mkview(free_slots=1, sessions=(
+        paused, mksv(1, "waiting_prefill", slo="interactive")))
+    plan2 = p.plan(contended)
+    assert plan2.unsuspend == ()
+    assert [a.session_id for a in plan2.admissions] == [1]
+
+
+def test_priority_serves_interactive_prefill_first():
+    p = make_planner(PLANNERS["priority"])
+    view = mkview(
+        sessions=(mksv(0, "prefilling", slot=0),
+                  mksv(1, "prefilling", slot=1, slo="interactive")),
+        q_prefill=(job(0), job(1)), cold_levels=())   # no packing: serial
+    plan = p.plan(view)
+    assert plan.prefill and plan.prefill[0].session_ids == (1,)
+
+
+# ---------------------------------------------------------------------------
+# priority end-to-end: preemption on the real engine beats FCFS TTFT
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+INTERACTIVE_ARRIVAL_S = 0.05                    # arrives under full load
+
+
+def _mixed_workload():
+    """Two batch agents saturating both KV slots, one interactive agent
+    arriving mid-cold-prefill."""
+    sessions = make_workload(3, workload="react",
+                             vocab_size=TINY.vocab_size,
+                             token_scale=0.0625, num_system_prompts=1,
+                             seed=11, stagger_s=0.0)
+    sessions[2].ready_s = INTERACTIVE_ARRIVAL_S
+    for s in sessions[:2]:
+        s.slo_class = "batch"
+    sessions[2].slo_class = "interactive"
+    return sessions
+
+
+def _interactive_ttft(sessions):
+    # measured against the submission time, which includes any slot/HOL
+    # wait (the engine rewrites Session.ready_s on every later turn, so
+    # the original arrival must come from the workload constant)
+    return sessions[2].first_token_s[0] - INTERACTIVE_ARRIVAL_S
+
+
+def _run_policy(params, policy):
+    ecfg = EngineConfig(num_slots=2, max_seq=512, cycle_budget=40,
+                        granularity=8, b_min=8, b_max=64, b_init=32,
+                        delta_b=8, control_interval_s=0.05,
+                        max_wall_s=120.0, record_events=True)
+    sessions = _mixed_workload()
+    eng = ServingEngine(TINY, params, PLANNERS[policy], ecfg)
+    rep = eng.run(sessions)
+    assert all(s.state == SessionState.FINISHED for s in sessions)
+    return eng, sessions, rep
+
+
+def test_priority_preemption_end_to_end(tiny_params):
+    eng, sessions, _ = _run_policy(tiny_params, "priority")
+    # the interactive arrival actually forced a preemption + later resume
+    assert eng.hotpath_stats["preemptions"] >= 1
+    assert eng.hotpath_stats["preempt_resumes"] >= 1
+    assert eng.hotpath_stats["preempt_resumes"] == \
+        eng.hotpath_stats["preemptions"]
+
+    # the preempted session (and everyone else) still decodes the exact
+    # greedy reference stream — park/unpark is lossless mid-prefill
+    streams = events_by_session(eng.event_log)
+    want = oracle_streams(TINY, tiny_params, sessions,
+                          num_slots=eng.ecfg.num_slots,
+                          max_seq=eng.ecfg.max_seq)
+    for s in sessions:
+        assert streams[s.session_id] == want[s.session_id]
+        assert s.output_tokens() == sum(t.decode_len for t in s.turns)
+
+    # interactive TTFT beats head-of-line-blocking FCFS on the same load
+    eng_f, sessions_f, _ = _run_policy(tiny_params, "fcfs")
+    assert eng_f.hotpath_stats["preemptions"] == 0
+    assert _interactive_ttft(sessions) < _interactive_ttft(sessions_f)
+
+
+# ---------------------------------------------------------------------------
+# journal record/replay determinism
+# ---------------------------------------------------------------------------
+
+def _golden_cfg():
+    return EngineConfig(num_slots=4, max_seq=512, cycle_budget=80,
+                        granularity=8, b_min=8, b_max=128, b_init=32,
+                        delta_b=8, control_interval_s=0.05,
+                        max_wall_s=60.0, record_events=True)
+
+
+def _workload():
+    return make_workload(3, workload="react", vocab_size=TINY.vocab_size,
+                         token_scale=0.0625, num_system_prompts=1,
+                         seed=0, stagger_s=0.05)
+
+
+def test_journal_replay_reproduces_token_events(tiny_params):
+    """Record a live agentserve run's plans, then replay the journal
+    against a fresh engine + fresh (identical) workload: every session's
+    token stream must come out identical, without the replay consulting
+    the wall clock for a single decision."""
+    eng = ServingEngine(TINY, tiny_params, POLICIES["agentserve"],
+                        _golden_cfg())
+    sessions = _workload()
+    eng.run(sessions)
+    recorded = events_by_session(eng.event_log)
+    assert len(eng.journal.records) > 0
+    assert eng.journal.dropped == 0
+
+    replayer = ReplayPlanner(eng.journal, spec=POLICIES["agentserve"])
+    eng2 = ServingEngine(TINY, tiny_params, replayer, _golden_cfg())
+    sessions2 = _workload()
+    eng2.run(sessions2)
+    replayed = events_by_session(eng2.event_log)
+
+    assert set(replayed) == set(recorded)
+    for sid in recorded:
+        assert replayed[sid] == recorded[sid]
+    for s, s2 in zip(sessions, sessions2):
+        assert s2.output_tokens() == s.output_tokens()
+        assert int(s2.last_token) == int(s.last_token)
+
+
+def test_journal_summary_and_trace_breakdown(tiny_params):
+    """The executed-plan journal feeds per-policy reporting, and the
+    cycle trace attributes Q_P occupancy to cold vs resume phases."""
+    eng = ServingEngine(TINY, tiny_params, POLICIES["agentserve"],
+                        _golden_cfg())
+    eng.run(_workload())
+    s = eng.journal.summary()
+    assert s["cycles"] == len(eng.journal.records) > 0
+    assert s["admissions"] > 0 and s["decode_cycles"] > 0
+    assert s["mean_chunk"] > 0
+    assert all("q_p_cold" in t and "q_p_resume" in t for t in eng.trace)
+    assert any(t["q_p_cold"] > 0 for t in eng.trace)
+    # occupancy breakdown is consistent
+    for t in eng.trace:
+        assert t["q_p_cold"] + t["q_p_resume"] == t["q_p"]
+
+
+def test_replay_planner_raises_when_exhausted():
+    rp = ReplayPlanner(PlanJournal(records=[]))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        rp.plan_control(0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# simulator: planner-unified semantics + fractional TPOT accounting
+# ---------------------------------------------------------------------------
+
+def _slow_profile(decode_rate: float):
+    import numpy as np
+    from repro.core.competitive import ThroughputProfile
+    levels = np.arange(10, 110, 10)
+    return ThroughputProfile(levels=levels,
+                             mu_decode=np.full(10, decode_rate),
+                             mu_cold=200.0 * np.ones(10),
+                             mu_resume=200.0 * np.ones(10))
+
+
+def test_simulator_slow_streams_keep_tpot_samples():
+    """Regression: a decode stream producing <0.5 tok per dt used to
+    round every interval's sample count to zero and vanish from the
+    TPOT percentiles; fractional tokens must accumulate instead."""
+    from repro.serving.simulator import SimSession, simulate
+    sess = [SimSession(cold_len=40,
+                       turns=[dict(resume_len=0, decode_len=10,
+                                   tool_s=0.0)])]
+    # 4 tok/s at dt=0.05 => 0.2 tok per interval: the old accounting
+    # recorded int(round(0.2)) == 0 samples forever
+    res = simulate(_slow_profile(4.0), sess, planner="agentserve",
+                   dt=0.05, max_t=60.0)
+    assert len(res.tpots) == 10                  # one sample per token
+    assert all(abs(t - 0.25) < 1e-6 for t in res.tpots)
+
+
+def test_simulator_consumes_planner_objects():
+    """The simulator reads policy semantics off the same CyclePlanner
+    the engine executes — FCFS ordering comes from the planner, and a
+    planner instance (not a name) is accepted directly."""
+    from repro.serving.simulator import SimSession, simulate
+    mk = lambda at: SimSession(cold_len=100, arrival_s=at,
+                               turns=[dict(resume_len=0, decode_len=5,
+                                           tool_s=0.0)])
+    for planner in (make_planner(POLICIES["fcfs"]),
+                    make_planner(PLANNERS["priority"]), "chunked"):
+        res = simulate(_slow_profile(50.0), [mk(0.0), mk(0.1)],
+                       planner=planner, max_t=60.0)
+        assert res.prefill_tokens_served > 0 and res.tpots
