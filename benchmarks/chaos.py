@@ -1,0 +1,200 @@
+"""Chaos sweep: goodput and recovery latency vs injected fault rate.
+
+    PYTHONPATH=src python benchmarks/chaos.py [--rates 0,0.15,0.3] [--smoke]
+
+Boots the online gateway over the *paged* engine and drives a seeded
+open-loop cohort while a deterministic ``FaultPlan`` (DESIGN.md §10)
+injects tool errors, tool hangs, engine step faults, client disconnects
+and page-exhaustion bursts at the given per-session rate.  The rate-0
+run is the fault-free baseline; every faulted run is then held to the
+fault-isolation contract:
+
+  * nothing wedges — every submitted stream reaches a terminal state;
+  * sessions the plan did NOT fault stream token-identically to the
+    baseline (greedy decoding is scheduling-independent, so fault
+    handling must not perturb anyone else's tokens);
+  * the pool reclaims every slot, and no page is held outside the
+    prefix cache (refcount consistency).
+
+Emits ``BENCH_chaos.json`` with one row per fault rate: goodput,
+abort/shed counts with per-reason attribution, and disconnect recovery
+latency (cancel -> stream terminal) percentiles.  ``--smoke`` is the CI
+chaos job: a small cohort at two rates with the same assertions.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import FaultPlan, drive_chaos
+from repro.serving.gateway import AgentGateway, GatewayConfig
+from repro.serving.metrics import collect_abort_reasons
+from repro.serving.policies import PLANNERS
+from repro.serving.workload import make_open_loop_workload
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else 0.0
+
+
+def run_rate(cfg, params, args, fault_rate: float) -> dict:
+    """One fault-rate point: fresh engine + gateway + plan (the plan
+    carries per-run injection state), seeded identically across rates
+    so the workload and arrivals never vary."""
+    ecfg = EngineConfig(num_slots=args.slots, max_seq=512,
+                        cycle_budget=160, granularity=16,
+                        control_interval_s=0.1,
+                        max_wall_s=float("inf"))
+    engine = ServingEngine(cfg, params, PLANNERS[args.policy], ecfg)
+    plan = FaultPlan.generate(
+        args.seed, args.agents,
+        tool_error_rate=fault_rate,
+        tool_hang_rate=fault_rate / 2,
+        step_error_rate=fault_rate / 2,
+        disconnect_rate=fault_rate / 2,
+        page_fault_bursts=1 if fault_rate > 0 else 0)
+    gateway = AgentGateway(engine, GatewayConfig(
+        high_watermark=max(args.agents * 2, 16),
+        tool_timeout_s=0.5, tool_retries=1, tool_backoff_base_s=0.01,
+        tool_failure_policy="abort"), faults=plan)
+    sessions = make_open_loop_workload(
+        args.agents, workload=args.workload, vocab_size=cfg.vocab_size,
+        token_scale=args.token_scale, num_system_prompts=1,
+        seed=args.seed, rate_rps=args.rate_rps)
+    arrivals = [s.ready_s for s in sessions]
+
+    async def go():
+        await gateway.start()
+        run = await asyncio.wait_for(
+            drive_chaos(gateway, sessions, arrivals, plan),
+            timeout=args.max_wall)
+        await gateway.stop(timeout_s=args.max_wall)
+        return run
+
+    run = asyncio.run(go())
+    # arrival offsets are strictly increasing, so gateway session ids
+    # line up with the plan's per-index fault targets
+    assert [s.session_id for s in sessions] == list(range(args.agents)), \
+        "session-id/plan mapping drifted"
+    assert run.wedged() == 0, "a stream reached no terminal state"
+
+    pool = engine.pool
+    assert pool.free_slots == ecfg.num_slots, "leaked KV slot"
+    prefix_refs = sum(len(e.pages) for e in pool._prefix.values())
+    assert int(pool.refcount.sum()) == prefix_refs, "leaked page refs"
+
+    tokens = sum(len(v) for v in run.streams().values())
+    good_tokens = sum(len(run.streams().get(s.session_id, []))
+                      for s in run.completed)
+    wall = max(run.wall_s, 1e-9)
+    return {
+        "fault_rate": fault_rate,
+        "submitted": args.agents,
+        "completed": len(run.completed),
+        "aborted": len(run.aborted),
+        "rejected": len(run.rejected),
+        "wall_s": run.wall_s,
+        "tokens": tokens,
+        "goodput_tok_s": good_tokens / wall,
+        "throughput_tok_s": tokens / wall,
+        "abort_reasons": collect_abort_reasons(run.aborted),
+        "injected": dict(plan.injected),
+        "recovery_p50_ms": _pct(run.recovery_s, 50) * 1e3,
+        "recovery_p95_ms": _pct(run.recovery_s, 95) * 1e3,
+        "terminal_faulted": sorted(plan.faulted_sessions()),
+        "gateway": gateway.stats(),
+        "streams": {str(k): v for k, v in run.streams().items()},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="0,0.15,0.3",
+                    help="comma-separated per-session fault rates")
+    ap.add_argument("--agents", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--policy", default="agentserve",
+                    choices=sorted(PLANNERS))
+    ap.add_argument("--workload", default="react",
+                    choices=["react", "plan_execute"])
+    ap.add_argument("--token-scale", type=float, default=0.0625)
+    ap.add_argument("--rate-rps", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-wall", type=float, default=180.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI chaos smoke: 8 agents, 2 rates, bounded "
+                         "wall clock, full isolation assertions")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.agents, args.token_scale = 8, 0.04
+        args.rates = "0,0.3"
+
+    cfg = get_smoke_config("smollm-360m")
+    cfg = dataclasses.replace(cfg, kv_layout="paged", kv_page_size=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rates = [float(r) for r in args.rates.split(",")]
+    if rates[0] != 0.0:
+        rates.insert(0, 0.0)             # the baseline is not optional
+
+    print(f"model={cfg.name} backend={jax.default_backend()} "
+          f"agents={args.agents} fault_rates={rates}")
+    results = []
+    baseline_streams = None
+    for rate in rates:
+        res = run_rate(cfg, params, args, rate)
+        if rate == 0.0:
+            assert res["aborted"] == 0 and res["completed"] == args.agents
+            baseline_streams = res["streams"]
+        else:
+            # the isolation contract: every session the plan did not
+            # terminally fault streams token-identical to the baseline
+            faulted = set(res["terminal_faulted"])
+            diverged = [sid for sid in range(args.agents)
+                        if sid not in faulted
+                        and res["streams"].get(str(sid))
+                        != baseline_streams.get(str(sid))]
+            res["unfaulted_identical"] = not diverged
+            assert not diverged, \
+                f"unfaulted sessions diverged under faults: {diverged}"
+        row = {k: v for k, v in res.items() if k != "streams"}
+        results.append(row)
+        print(f"rate={rate:<5} completed={res['completed']:>3} "
+              f"aborted={res['aborted']:>3} "
+              f"goodput={res['goodput_tok_s']:.1f} tok/s "
+              f"reasons={res['abort_reasons']} "
+              f"recovery_p95={res['recovery_p95_ms']:.0f}ms", flush=True)
+
+    report = {
+        "model": cfg.name,
+        "backend": jax.default_backend(),
+        "agents": args.agents,
+        "slots": args.slots,
+        "workload": args.workload,
+        "token_scale": args.token_scale,
+        "seed": args.seed,
+        "rates": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        faulted_rows = [r for r in results if r["fault_rate"] > 0]
+        assert faulted_rows and all(r["aborted"] > 0 or r["injected"][
+            "page_exhaustion"] > 0 or not r["terminal_faulted"]
+            for r in faulted_rows), "smoke run injected nothing"
+        assert all(r.get("unfaulted_identical", True) for r in results)
+
+
+if __name__ == "__main__":
+    main()

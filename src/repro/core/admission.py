@@ -69,12 +69,20 @@ class WatermarkGate:
     for a KV slot) reaches ``high`` the gate closes and submissions are
     rejected (surfaced as 429-style results); it reopens only once
     occupancy drains to ``low``.  The high/low hysteresis prevents
-    reject/accept flapping right at the boundary."""
+    reject/accept flapping right at the boundary.
+
+    ``pressure`` tightens the gate without reconfiguring it: the
+    effective high watermark drops by that amount (floored just above
+    ``low`` so the hysteresis invariant holds).  The gateway raises it
+    while the engine reports KV-exhaustion deferrals — shedding at the
+    door is the cheapest rung of the degradation ladder (DESIGN.md
+    §10) — and clears it once the pressure passes."""
     high: int
     low: int = -1                    # default: high // 2
     shedding: bool = False
     admitted: int = 0
     rejected: int = 0
+    pressure: int = 0                # transient tightening (KV pressure)
 
     def __post_init__(self):
         if self.low < 0:
@@ -83,10 +91,16 @@ class WatermarkGate:
             raise ValueError(f"low watermark {self.low} must be below "
                              f"high {self.high}")
 
+    def effective_high(self) -> int:
+        return max(self.low + 1, self.high - self.pressure)
+
+    def set_pressure(self, pressure: int) -> None:
+        self.pressure = max(0, int(pressure))
+
     def check(self, occupancy: int) -> bool:
         """Update the shedding state for the observed occupancy and
         return whether a request would be admitted (no counting)."""
-        if occupancy >= self.high:
+        if occupancy >= self.effective_high():
             self.shedding = True
         elif occupancy <= self.low:
             self.shedding = False

@@ -87,6 +87,9 @@ class SessionView:
     slo: str = BATCH
     prefix_hit_len: int = 0          # non-mutating prefix-cache probe
     paused_seq: int = -1             # preemption order stamp (PAUSED only)
+    deadline_s: float = float("inf")  # absolute SLO deadline (the engine
+    #                                   aborts past it; planners may order
+    #                                   admissions by urgency)
 
     @property
     def remaining_prefill(self) -> int:
@@ -356,7 +359,9 @@ class CyclePlanner:
                         ) -> Tuple[Admission, ...]:
         ready = [sv for sv in view.sessions
                  if ((sv.state == S_WAITING or sv.state == S_TOOL_CALL)
-                     and sv.ready_s <= view.now)]
+                     and sv.ready_s <= view.now
+                     and sv.deadline_s > view.now)]   # expired: engine
+        #                                               aborts, not admits
         out: List[Admission] = []
         for sv in self.admission_order(ready):
             needs_slot = sv.state == S_WAITING or sv.slot < 0
@@ -725,8 +730,11 @@ class PriorityPlanner(AgentServePlanner):
 
     def admission_order(self, candidates: List[SessionView],
                         ) -> List[SessionView]:
-        return ([sv for sv in candidates if sv.slo == INTERACTIVE]
-                + [sv for sv in candidates if sv.slo != INTERACTIVE])
+        # interactive first; within a class, earliest deadline first
+        # (stable: all-inf deadlines preserve registry order)
+        return sorted(candidates,
+                      key=lambda sv: (0 if sv.slo == INTERACTIVE else 1,
+                                      sv.deadline_s))
 
     def prefill_queue_order(self, jobs: List[JobView], sim: "_SimState",
                             ) -> List[JobView]:

@@ -65,9 +65,12 @@ def _json_resp(status: int, obj) -> bytes:
 def _session_from_spec(spec: Dict, mcfg, default_token_scale: float):
     """Build a scripted agent session from a client JSON spec:
     ``{"workload": "react", "seed": 7, "token_scale": 0.1,
-    "slo_class": "interactive"}``.  The session_id is assigned by the
-    gateway at admission; ``slo_class`` matters under ``--policy
-    priority`` (interactive requests preempt batch cold prefills)."""
+    "slo_class": "interactive", "deadline_s": 30.0}``.  The session_id
+    is assigned by the gateway at admission; ``slo_class`` matters under
+    ``--policy priority`` (interactive requests preempt batch cold
+    prefills); ``deadline_s`` (relative seconds, optional) arms an
+    engine-enforced SLO deadline — past it the session is aborted and
+    its stream ends with an ``event: aborted`` record."""
     workload = spec.get("workload", "react")
     if workload not in SPECS:
         raise ValueError(f"unknown workload {workload!r}")
@@ -124,11 +127,13 @@ async def handle_connection(gateway: AgentGateway, mcfg,
                 if not isinstance(spec, dict):
                     raise ValueError("request body must be a JSON object")
                 sess = _session_from_spec(spec, mcfg, default_token_scale)
+                deadline = spec.get("deadline_s")
+                deadline = None if deadline is None else float(deadline)
             except (ValueError, KeyError, TypeError) as e:
                 writer.write(_json_resp(400, {"error": str(e)}))
                 await writer.drain()
                 return
-            res = await gateway.submit(sess)
+            res = await gateway.submit(sess, deadline_s=deadline)
             if isinstance(res, Rejected):
                 writer.write(_json_resp(429, {
                     "error": res.reason, "occupancy": res.occupancy}))
@@ -139,16 +144,40 @@ async def handle_connection(gateway: AgentGateway, mcfg,
                          b"Cache-Control: no-cache\r\n"
                          b"Connection: close\r\n\r\n")
             await writer.drain()
-            async for ev in res.events():
-                writer.write(b"data: "
-                             + json.dumps(dataclasses.asdict(ev)).encode()
+            # disconnect watcher: the request body is fully consumed, so
+            # any further read completing means the peer closed its end
+            # of the connection — cancel the session so the engine
+            # reclaims its slot/pages promptly (DESIGN.md §10)
+            watcher = asyncio.get_running_loop().create_task(reader.read())
+            aborted_ev = None
+            try:
+                async for ev in res.events():
+                    if watcher.done():
+                        res.cancel()     # client went away mid-stream
+                    if ev.error:
+                        aborted_ev = ev
+                    writer.write(b"data: "
+                                 + json.dumps(dataclasses.asdict(ev)).encode()
+                                 + b"\n\n")
+                    await writer.drain()
+            except (ConnectionResetError, BrokenPipeError):
+                res.cancel()             # write side saw the disconnect
+                raise
+            finally:
+                watcher.cancel()
+            if aborted_ev is not None:
+                writer.write(b"event: aborted\ndata: "
+                             + json.dumps({
+                                 "session_id": res.session_id,
+                                 "reason": aborted_ev.abort_reason,
+                                 "tokens": len(res.received) - 1}).encode()
                              + b"\n\n")
-                await writer.drain()
-            writer.write(b"event: done\ndata: "
-                         + json.dumps({
-                             "session_id": res.session_id,
-                             "tokens": len(res.received)}).encode()
-                         + b"\n\n")
+            else:
+                writer.write(b"event: done\ndata: "
+                             + json.dumps({
+                                 "session_id": res.session_id,
+                                 "tokens": len(res.received)}).encode()
+                             + b"\n\n")
         else:
             writer.write(_json_resp(404, {"error": f"no route {path}"}))
         await writer.drain()
@@ -187,8 +216,8 @@ async def sse_submit(host: str, port: int, spec: Dict,
             if not line:
                 break
             line = line.strip()
-            if line == b"event: done":
-                await reader.readline()  # the done data record
+            if line in (b"event: done", b"event: aborted"):
+                await reader.readline()  # the terminal data record
                 break
             if line.startswith(b"data: "):
                 events.append(json.loads(line[len(b"data: "):]))
@@ -311,7 +340,8 @@ async def _serve_smoke(args) -> int:
     done = list(gateway.completed_sessions)
     rep = build_open_loop_report(
         args.policy, done, wall, args.rate, rejected=shed,
-        thresholds=SLOThresholds(ttft_s=10.0, tpot_s=2.0))
+        thresholds=SLOThresholds(ttft_s=10.0, tpot_s=2.0),
+        aborted_sessions=list(gateway.failed_sessions))
     print(OpenLoopReport.HEADER)
     print(rep.row(), flush=True)
     assert ok + shed == args.agents, "every request must resolve"

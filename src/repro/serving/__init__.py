@@ -1,7 +1,10 @@
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.faults import (ChaosRun, FaultPlan,  # noqa: F401
+                                  FaultSpec, InjectedFault, SessionFault,
+                                  drive_chaos)
 from repro.serving.gateway import (AgentGateway, GatewayConfig,  # noqa: F401
                                    LiveSession, Rejected, drive_open_loop)
-from repro.serving.kvcache import KVCachePool  # noqa: F401
+from repro.serving.kvcache import KVCachePool, KVExhausted  # noqa: F401
 from repro.serving.metrics import (OpenLoopReport, ServingReport,  # noqa: F401
                                    SLOThresholds, build_open_loop_report)
 from repro.serving.policies import POLICIES, PolicySpec  # noqa: F401

@@ -81,7 +81,8 @@ from repro.core.slots import SlotManager
 from repro.models import (POSITIONAL_CACHE_KEYS, forward_decode,
                           forward_decode_fused, forward_decode_megastep,
                           forward_prefill, forward_resume_batch)
-from repro.serving.kvcache import make_pool, prefix_key
+from repro.serving.faults import SessionFault
+from repro.serving.kvcache import KVExhausted, make_pool, prefix_key
 from repro.serving.metrics import ServingReport, SLOThresholds, build_report
 from repro.serving.policies import PolicySpec, make_planner
 from repro.serving.reactor import TokenEvent
@@ -124,6 +125,11 @@ class EngineConfig:
     # --- plan journal (DESIGN.md §9) ----------------------------------
     journal_max: int = 200_000       # executed CyclePlans kept for
     #                                  replay / per-policy reporting
+    # --- fault domains (DESIGN.md §10) --------------------------------
+    kv_defer_limit: int = 8          # per-session KVExhausted deferrals
+    #                                  tolerated before the session is
+    #                                  aborted (the back-off valve that
+    #                                  frees pages under hard pressure)
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -443,7 +449,15 @@ class ServingEngine:
                               "prefill_tiles_streamed": 0,
                               "prefill_tiles_skipped": 0,
                               "parks": 0, "unparks": 0,
-                              "preemptions": 0, "preempt_resumes": 0}
+                              "preemptions": 0, "preempt_resumes": 0,
+                              "aborted": 0, "deadline_aborts": 0,
+                              "kv_deferred": 0}
+        # fault-domain state (DESIGN.md §10): the installed chaos plan,
+        # per-session KVExhausted deferral counts, and the last cycle a
+        # deferral happened (the gateway's admission-tightening signal)
+        self.faults = None
+        self._kv_retries: Dict[int, int] = {}
+        self._kv_last_defer_cycle = -(10 ** 9)
         # prefill-side telemetry accumulated at dispatch time (host
         # arithmetic only) and folded into hotpath_stats at the sampled
         # flush cadence
@@ -588,6 +602,7 @@ class ServingEngine:
         ``shape_len`` — shorter work is padded and masked.  The call is
         dispatched asynchronously; the host only blocks on the logits
         when this chunk completes the prefill."""
+        self._fault_check([sess.session_id])
         take = min(take if take is not None else shape_len, shape_len,
                    self._aligned_remaining(sess))
         if take <= 0:
@@ -706,6 +721,7 @@ class ServingEngine:
         planner's K target is clamped to the live burst/capacity bounds
         (correctness clamps, not decisions)."""
         ecfg = self.ecfg
+        self._fault_check([s.session_id for s in active])
         if (self._window_sessions
                 and [s.session_id for s in self._window_sessions]
                 != [s.session_id for s in active]):
@@ -727,11 +743,21 @@ class ServingEngine:
                 exe, K = bound[0]["fn"], bound[1]
         if self._window_steps + K > ecfg.telemetry_sample_steps:
             self._flush_decode()
+        try:
+            for s in active:
+                # paged: grow/COW each active lane's table to cover the
+                # K decode writes BEFORE the device dispatch — the block
+                # table is fixed for the whole (mega)step
+                self._prepare_append(s.slot, K)
+        except KVExhausted:
+            # decode cannot proceed without its pages: skip this cycle's
+            # decode (pages already prepped for earlier lanes stay owned
+            # by their slots — consistent, just early) and retry next
+            # cycle; past the defer limit the offending session aborts
+            self._kv_defer_or_abort(s.session_id)
+            return
         for s in active:
-            # paged: grow/COW each active lane's table to cover the K
-            # decode writes BEFORE the device dispatch — the block table
-            # is fixed for the whole (mega)step
-            self._prepare_append(s.slot, K)
+            self._kv_retries.pop(s.session_id, None)
         self._sync_device_state(active)
         if self._window_t0 is None:
             self._window_t0 = self._clock()
@@ -838,7 +864,11 @@ class ServingEngine:
         if s.state == SessionState.WAITING_PREFILL:
             if self.pool.free_slots == 0:
                 return  # backpressure: the planner retries next cycle
-            s.slot = self.pool.alloc()
+            try:
+                s.slot = self.pool.alloc()
+            except KVExhausted:
+                self._kv_defer_or_abort(s.session_id)
+                return  # admission deferred: retries next cycle
             # always probe, even when the plan's peek saw a miss: the
             # pool's hit/miss accounting and LRU recency refresh are
             # dispatch-time effects that must happen exactly once —
@@ -851,7 +881,11 @@ class ServingEngine:
                 # before its resume prefill may run
                 if self.pool.free_slots == 0:
                     return
-                s.slot = self.pool.alloc()
+                try:
+                    s.slot = self.pool.alloc()
+                except KVExhausted:
+                    self._kv_defer_or_abort(s.session_id)
+                    return
                 self.pool.unpark(s.slot,
                                  self._parked.pop(s.session_id))
                 self.hotpath_stats["unparks"] += 1
@@ -914,7 +948,12 @@ class ServingEngine:
         if (s is None or s.state != SessionState.PREFILL_PAUSED
                 or self.pool.free_slots == 0):
             return
-        s.slot = self.pool.alloc()
+        try:
+            s.slot = self.pool.alloc()
+        except KVExhausted:
+            self._kv_defer_or_abort(s.session_id)
+            return
+
         self.pool.unpark(s.slot, self._parked.pop(sid))
         self._paused_seq.pop(sid, None)
         s.state = SessionState.PREFILLING
@@ -933,6 +972,10 @@ class ServingEngine:
         diverged run) the batch rounds down to a warmed size."""
         qd = self.queues.q_decode
         want = list(rp.session_ids)
+        # fault check BEFORE popping queue entries: a SessionFault here
+        # propagates with every queue untouched, so abort_session's
+        # entry-strip is the only bookkeeping needed
+        self._fault_check(want)
         jobs: List[Tuple[Job, Session]] = []
         while qd and len(jobs) < len(want):
             job = qd.popleft()
@@ -956,8 +999,14 @@ class ServingEngine:
             for job, _ in reversed(jobs[m:]):
                 qd.appendleft(job)
             jobs = jobs[:m]
-        unfinished = self._dispatch_prefill_batch(jobs, rp.bucket,
-                                                  count_overruns=False)
+        try:
+            unfinished = self._dispatch_prefill_batch(jobs, rp.bucket,
+                                                      count_overruns=False)
+        except KVExhausted as e:
+            for job, _ in reversed(jobs):
+                qd.appendleft(job)       # whole batch retries next cycle
+            self._kv_defer_or_abort(e.session_id)
+            return False
         self.hotpath_stats["resume_batches"] += 1
         self.hotpath_stats["resume_jobs"] += len(jobs)
         for job, _ in unfinished:
@@ -990,8 +1039,15 @@ class ServingEngine:
                           np.int32)
         logit_idx = np.asarray([t - 1 for t in takes], np.int32)
 
-        for i, (_, s) in enumerate(jobs):
-            self._prepare_append(s.slot, takes[i])
+        try:
+            for i, (_, s) in enumerate(jobs):
+                self._prepare_append(s.slot, takes[i])
+        except KVExhausted as e:
+            # annotate the offending session for the caller's deferral
+            # accounting; pages prepped for earlier rows stay owned by
+            # their slots (consistent — those appends just retry free)
+            e.session_id = s.session_id
+            raise
         logits, new_cache = self._ex.resume(
             self.params, self.pool.cache, jnp.asarray(toks),
             jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(logit_idx),
@@ -1062,16 +1118,25 @@ class ServingEngine:
             # unreachable with our workloads (shared prefix < full prompt);
             # would require a last-token re-run that is unsafe for SSM state
             raise RuntimeError("fully-cached request needs >=1 new token")
-        if op.kind == "whole":
-            # llama.cpp-style: run the entire prompt to completion now
-            while s.state == SessionState.PREFILLING:
-                self._run_prefill_tokens(s, op.shape)
+        try:
+            if op.kind == "whole":
+                # llama.cpp-style: run the entire prompt to completion
+                while s.state == SessionState.PREFILLING:
+                    self._run_prefill_tokens(s, op.shape)
+                return True
+            fn = self._resolve_cold_fn(op, slot_exec)
+            for _ in range(op.reps):
+                if s.state != SessionState.PREFILLING:
+                    break
+                self._run_prefill_tokens(s, op.shape, fn=fn)
+        except KVExhausted:
+            # the chunk's prepare_append rolled back cleanly: the job
+            # returns to the head of Q_P and retries next cycle (work
+            # already chunked in stays — lengths only advance on
+            # successful dispatch)
+            qp.appendleft(job)
+            self._kv_defer_or_abort(s.session_id)
             return True
-        fn = self._resolve_cold_fn(op, slot_exec)
-        for _ in range(op.reps):
-            if s.state != SessionState.PREFILLING:
-                break
-            self._run_prefill_tokens(s, op.shape, fn=fn)
         if s.state == SessionState.PREFILLING:
             qp.appendleft(job)           # unfinished: stays at the head
         return True
@@ -1081,6 +1146,7 @@ class ServingEngine:
         executable (the same machinery — and warmed shapes — as batched
         resume).  Unfinished jobs return to the queue head in order."""
         qp = self.queues.q_prefill
+        self._fault_check(op.session_ids)    # before any queue pop
         jobs: List[Tuple[Job, Session]] = []
         for sid in op.session_ids:
             got = self._take_prefill_job(sid)
@@ -1093,8 +1159,14 @@ class ServingEngine:
             jobs.append(got)
         if not jobs:
             return False
-        unfinished = self._dispatch_prefill_batch(
-            jobs, op.shape, count_overruns=True, cold_pack=len(jobs))
+        try:
+            unfinished = self._dispatch_prefill_batch(
+                jobs, op.shape, count_overruns=True, cold_pack=len(jobs))
+        except KVExhausted as e:
+            for job, _ in reversed(jobs):
+                qp.appendleft(job)       # whole pack retries next cycle
+            self._kv_defer_or_abort(e.session_id)
+            return False
         for job, _ in reversed(unfinished):
             qp.appendleft(job)           # continue next cycle, in order
         return True
@@ -1129,8 +1201,10 @@ class ServingEngine:
             self.scheduler.state.r_min = r
         self._next_ctrl = self._clock() + ecfg.control_interval_s
 
+    _TERMINAL = (SessionState.FINISHED, SessionState.ABORTED)
+
     def pending(self) -> bool:
-        return any(s.state != SessionState.FINISHED
+        return any(s.state not in self._TERMINAL
                    for s in self._sessions.values())
 
     def sessions(self) -> List[Session]:
@@ -1145,7 +1219,7 @@ class ServingEngine:
         s = self._sessions.get(session_id)
         if s is None:
             return
-        if s.state != SessionState.FINISHED:
+        if s.state not in self._TERMINAL:
             raise ValueError(f"cannot detach live session {session_id} "
                              f"({s.state})")
         del self._sessions[session_id]
@@ -1180,7 +1254,8 @@ class ServingEngine:
                 decode_len=t.decode_len if t else 0, decoded=s.decoded,
                 shared_prefix_len=s.shared_prefix_len, ready_s=s.ready_s,
                 slo=s.slo_class, prefix_hit_len=hit,
-                paused_seq=self._paused_seq.get(s.session_id, -1)))
+                paused_seq=self._paused_seq.get(s.session_id, -1),
+                deadline_s=s.deadline_s))
         return EngineView(
             now=now, next_ctrl=self._next_ctrl,
             tpot_step_ms=self.scheduler.state.tpot_step_ms,
@@ -1219,6 +1294,14 @@ class ServingEngine:
         ecfg = self.ecfg
         now = self._clock()
 
+        # ---- SLO deadline sweep (DESIGN.md §10) -------------------
+        # expired sessions are aborted before the planner snapshots, so
+        # a plan never routes work to a session past its deadline
+        for s in list(self._sessions.values()):
+            if s.deadline_s < now and s.state not in self._TERMINAL:
+                if self.abort_session(s.session_id, "deadline"):
+                    self.hotpath_stats["deadline_aborts"] += 1
+
         # ---- control update (Algorithm 1) -------------------------
         ctrl = self.planner.plan_control(now, self._next_ctrl)
         if ctrl.flush:
@@ -1231,7 +1314,14 @@ class ServingEngine:
         view = self.snapshot(now)
         plan = dataclasses.replace(self.planner.plan(view), control=ctrl)
         events_before = len(self._events)
-        outcome = self.dispatcher.execute(plan, now)
+        try:
+            outcome = self.dispatcher.execute(plan, now)
+        except SessionFault as f:
+            # engine-level quarantine: the fault names exactly one
+            # session (checks run *before* device dispatch, so no
+            # partial cycle state exists); abort it and keep serving
+            self.abort_session(f.session_id, f.reason)
+            outcome = CycleOutcome(did_work=True)
 
         if len(self.trace) < ecfg.trace_max:
             self.trace.append(dict(
@@ -1284,6 +1374,80 @@ class ServingEngine:
         self._parked[session_id] = self.pool.park(s.slot)
         s.slot = -1
         self.hotpath_stats["parks"] += 1
+
+    def abort_session(self, session_id: int, reason: str) -> bool:
+        """Quarantine one session (DESIGN.md §10): flush any in-flight
+        decode window it sits in, strip its queue entries, reclaim its
+        slot / parked pages via the existing free/park machinery, mark
+        it ABORTED and emit its terminal error event.  Every other
+        session's state is untouched — this is the fault-domain
+        boundary.  False when the session is unknown or already
+        terminal (abort racing completion is benign)."""
+        s = self._sessions.get(session_id)
+        if s is None or s.state in (SessionState.FINISHED,
+                                    SessionState.ABORTED):
+            return False
+        if any(w.session_id == session_id for w in self._window_sessions):
+            # the window holds real decoded tokens — deliver them first
+            self._flush_decode()
+            if s.state in (SessionState.FINISHED, SessionState.ABORTED):
+                return False             # the flush completed the session
+        for q in (self.queues.q_decode, self.queues.q_prefill):
+            stale = [j for j in q if j.session_id == session_id]
+            for j in stale:
+                q.remove(j)
+        if s.slot >= 0:
+            self.pool.free(s.slot)
+            s.slot = -1
+        entry = self._parked.pop(session_id, None)
+        if entry is not None:
+            self.pool.release_entry(entry)   # paged: drop page refs
+        self._paused_seq.pop(session_id, None)
+        self._kv_retries.pop(session_id, None)
+        self._dev_dirty = True           # decode membership changed
+        s.state = SessionState.ABORTED
+        s.abort_reason = reason
+        self.hotpath_stats["aborted"] += 1
+        self._events.append(TokenEvent(
+            session_id=session_id, token=-1, t=self._clock(),
+            turn_idx=s.turn_idx, index=-1, session_end=True,
+            error=True, abort_reason=reason))
+        return True
+
+    def install_faults(self, plan) -> None:
+        """Arm a chaos ``FaultPlan`` (serving/faults.py): step faults
+        check before every dispatch, page faults inside the pool's
+        allocator."""
+        self.faults = plan
+        self.pool.fault_hook = plan.pool_hook
+
+    def _fault_check(self, session_ids) -> None:
+        """Chaos hook: called before a dispatch touches device state for
+        these sessions — a planned step fault raises ``SessionFault``
+        here, where aborting leaves no partial cycle state behind."""
+        if self.faults is None:
+            return
+        for sid in session_ids:
+            self.faults.check_step(sid)
+
+    def _kv_defer_or_abort(self, session_id: int) -> None:
+        """KVExhausted degradation ladder: count the deferral (the op
+        was or will be re-queued — transparent to tokens), and once one
+        session has deferred past ``kv_defer_limit`` convert it to a
+        ``SessionFault`` — aborting that session frees its pages, which
+        is what lets everyone else make progress under hard pressure."""
+        self.hotpath_stats["kv_deferred"] += 1
+        self._kv_last_defer_cycle = self._cycle
+        n = self._kv_retries.get(session_id, 0) + 1
+        self._kv_retries[session_id] = n
+        if n > self.ecfg.kv_defer_limit:
+            raise SessionFault(session_id, "kv_exhausted")
+
+    def kv_pressure_recent(self, window: int = 50) -> bool:
+        """True when a KVExhausted deferral happened within the last
+        ``window`` cycles — the gateway tightens its admission watermark
+        on this signal (shed at the door rather than defer inside)."""
+        return self._cycle - self._kv_last_defer_cycle <= window
 
     def slot_pressure(self) -> bool:
         """True when a waiting session is blocked on slot exhaustion —

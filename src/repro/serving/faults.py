@@ -1,0 +1,278 @@
+"""Deterministic fault injection: the chaos layer (DESIGN.md §10).
+
+The fault-domain claim this repo makes — any single-session fault
+degrades exactly one session, and capacity faults degrade *throughput*,
+never correctness — is only worth anything if it is testable.  This
+module provides the test substrate: a seeded ``FaultPlan`` decides, up
+front and reproducibly, which sessions experience which faults:
+
+  * ``tool_error`` / ``tool_hang`` — the gateway's ``_tool_wait``
+    consults the plan per (session, turn, attempt): an error raises
+    ``InjectedFault`` inside the tool call, a hang sleeps past the
+    configured tool timeout.  Faults can hit only the first k attempts
+    (``attempts``), exercising retry recovery, or every attempt,
+    exercising the on-exhaustion policy.
+  * ``step_error`` — the engine's dispatch paths call ``check_step``
+    before touching device state; the plan raises ``SessionFault`` for
+    the armed session at its n-th dispatch, exercising engine-level
+    quarantine (``abort_session``) instead of loop death.
+  * ``page_exhaustion`` — installed as the pool's ``fault_hook``: the
+    plan counts page allocations and fails a chosen consecutive range,
+    exercising ``KVExhausted`` deferral + admission shedding.
+  * ``disconnect`` — consumed by the *client* side (``drive_chaos``):
+    the consumer cancels its ``LiveSession`` after receiving a chosen
+    number of tokens, exercising prompt resource reclamation.
+
+A ``FaultPlan`` instance carries per-run mutable counters (attempt
+numbers, allocation index), so build a fresh plan per run; given the
+same seed and the same call sequence the injected faults are identical.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kvcache import KVExhausted
+from repro.serving.request import Session, SessionState
+
+
+class InjectedFault(RuntimeError):
+    """A chaos-injected tool failure (distinguishable in logs from real
+    tool errors; handled identically)."""
+
+
+class SessionFault(RuntimeError):
+    """A fault attributable to exactly one session.  ``step()`` catches
+    it and quarantines (aborts) that session; every other session's
+    cycle proceeds."""
+
+    def __init__(self, session_id: int, reason: str):
+        super().__init__(f"session {session_id}: {reason}")
+        self.session_id = session_id
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault."""
+    kind: str                 # tool_error | tool_hang | step_error |
+    #                           page_exhaustion | disconnect
+    session_id: int = -1      # target (all kinds except page_exhaustion)
+    turn_idx: int = -1        # tool faults: which tool call (-1 = every)
+    attempts: int = 10 ** 9   # tool faults: fail the first k attempts
+    at_count: int = 0         # page_exhaustion: first failing alloc index
+    #                           step_error: dispatch index that faults
+    count: int = 1            # page_exhaustion: consecutive failing allocs
+    at_token: int = 1         # disconnect: cancel after this many tokens
+    hang_s: float = 3600.0    # tool_hang: sleep length (>> any timeout)
+
+
+class FaultPlan:
+    """Seeded, deterministic fault schedule + per-run injection state."""
+
+    def __init__(self, specs: Tuple[FaultSpec, ...] = (), seed: int = 0):
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self.seed = seed
+        # per-run mutable injection state
+        self._page_allocs = 0             # pool allocation call index
+        self._dispatches: Dict[int, int] = {}   # sid -> dispatch count
+        self._tool_specs: Dict[int, List[FaultSpec]] = {}
+        self._step_specs: Dict[int, FaultSpec] = {}
+        self._step_fired: set = set()
+        self._disconnects: Dict[int, int] = {}
+        self._page_ranges: List[Tuple[int, int]] = []
+        for sp in self.specs:
+            if sp.kind in ("tool_error", "tool_hang"):
+                self._tool_specs.setdefault(sp.session_id, []).append(sp)
+            elif sp.kind == "step_error":
+                self._step_specs[sp.session_id] = sp
+            elif sp.kind == "disconnect":
+                self._disconnects[sp.session_id] = sp.at_token
+            elif sp.kind == "page_exhaustion":
+                self._page_ranges.append((sp.at_count,
+                                          sp.at_count + sp.count))
+            else:
+                raise ValueError(f"unknown fault kind {sp.kind}")
+        self.injected = {"tool_error": 0, "tool_hang": 0, "step_error": 0,
+                         "page_exhaustion": 0}
+
+    # ---- construction -------------------------------------------------
+    @classmethod
+    def generate(cls, seed: int, num_sessions: int, *,
+                 tool_error_rate: float = 0.0,
+                 tool_hang_rate: float = 0.0,
+                 step_error_rate: float = 0.0,
+                 disconnect_rate: float = 0.0,
+                 page_fault_bursts: int = 0,
+                 page_burst_len: int = 3,
+                 recover_fraction: float = 0.5) -> "FaultPlan":
+        """Draw a fault schedule: each session independently suffers at
+        most one fault kind (rates are per-session probabilities, in the
+        order tool_error > tool_hang > step_error > disconnect), plus
+        ``page_fault_bursts`` bursts of failing page allocations spread
+        over the run.  ``recover_fraction`` of tool errors hit only the
+        first attempt (a retry then succeeds)."""
+        rng = np.random.default_rng(seed)
+        specs: List[FaultSpec] = []
+        for sid in range(num_sessions):
+            u = rng.random()
+            if u < tool_error_rate:
+                recover = rng.random() < recover_fraction
+                specs.append(FaultSpec(
+                    kind="tool_error", session_id=sid, turn_idx=-1,
+                    attempts=1 if recover else 10 ** 9))
+            elif u < tool_error_rate + tool_hang_rate:
+                specs.append(FaultSpec(kind="tool_hang", session_id=sid))
+            elif u < tool_error_rate + tool_hang_rate + step_error_rate:
+                specs.append(FaultSpec(
+                    kind="step_error", session_id=sid,
+                    at_count=int(rng.integers(0, 4))))
+            elif u < (tool_error_rate + tool_hang_rate + step_error_rate
+                      + disconnect_rate):
+                specs.append(FaultSpec(
+                    kind="disconnect", session_id=sid,
+                    at_token=int(rng.integers(1, 6))))
+        for _ in range(page_fault_bursts):
+            specs.append(FaultSpec(
+                kind="page_exhaustion",
+                at_count=int(rng.integers(4, 64)),
+                count=page_burst_len))
+        return cls(tuple(specs), seed=seed)
+
+    # ---- engine-side hooks --------------------------------------------
+    def pool_hook(self, what: str) -> None:
+        """Installed as ``KVCachePool.fault_hook``: raise ``KVExhausted``
+        for page allocations inside a planned failure burst."""
+        if what != "page":
+            return
+        i = self._page_allocs
+        self._page_allocs += 1
+        for lo, hi in self._page_ranges:
+            if lo <= i < hi:
+                self.injected["page_exhaustion"] += 1
+                raise KVExhausted(
+                    "page", f"injected page exhaustion (alloc #{i})")
+
+    def check_step(self, session_id: int) -> None:
+        """Called by the engine before dispatching work for a session;
+        raises ``SessionFault`` at the armed dispatch index."""
+        sp = self._step_specs.get(session_id)
+        if sp is None or session_id in self._step_fired:
+            return
+        n = self._dispatches.get(session_id, 0)
+        self._dispatches[session_id] = n + 1
+        if n >= sp.at_count:
+            self._step_fired.add(session_id)
+            self.injected["step_error"] += 1
+            raise SessionFault(session_id, "injected_step_error")
+
+    # ---- gateway-side hooks -------------------------------------------
+    def tool_fault(self, session_id: int, turn_idx: int,
+                   attempt: int) -> Optional[FaultSpec]:
+        """The fault (if any) for this tool-call attempt."""
+        for sp in self._tool_specs.get(session_id, ()):
+            if sp.turn_idx not in (-1, turn_idx) or attempt >= sp.attempts:
+                continue
+            self.injected[sp.kind] += 1
+            return sp
+        return None
+
+    # ---- client-side hooks --------------------------------------------
+    def disconnect_at(self, session_id: int) -> Optional[int]:
+        """Token count after which the client should cancel (None = no
+        planned disconnect for this session)."""
+        return self._disconnects.get(session_id)
+
+    def faulted_sessions(self) -> set:
+        """Session ids with a *terminal* planned fault (ones expected to
+        abort rather than complete; recoverable tool errors excluded).
+        Page-exhaustion bursts target no session — they are transparent
+        deferrals unless the defer limit trips."""
+        out = set()
+        for sp in self.specs:
+            if sp.kind == "step_error" or sp.kind == "disconnect":
+                out.add(sp.session_id)
+            elif sp.kind in ("tool_error", "tool_hang") \
+                    and sp.attempts >= 10 ** 9:
+                out.add(sp.session_id)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# chaos driver (benchmarks/chaos.py, tests/test_faults.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChaosRun:
+    """What one faulted open-loop drive observed, client-side."""
+    completed: List[Session]
+    aborted: List[Session]
+    rejected: List[Session]
+    events: List[Tuple[float, object]]      # (driver wall time, event)
+    recovery_s: List[float]                 # cancel -> terminal latency
+    wall_s: float = 0.0
+
+    def wedged(self) -> int:
+        """Sessions that reached no terminal state — must be zero."""
+        terminal = {s.session_id for s in self.completed} \
+            | {s.session_id for s in self.aborted} \
+            | {s.session_id for s in self.rejected}
+        seen = {e.session_id for _, e in self.events}
+        return len(seen - terminal)
+
+    def streams(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _, ev in self.events:
+            if not getattr(ev, "error", False):
+                out.setdefault(ev.session_id, []).append(ev.token)
+        return out
+
+
+async def drive_chaos(gateway, sessions: List[Session], arrivals,
+                      plan: FaultPlan, *, time_scale: float = 1.0,
+                      ) -> ChaosRun:
+    """Open-loop driver with client-side disconnect injection: submit at
+    the arrival offsets, consume every stream, and cancel sessions the
+    plan marks for mid-stream disconnect after their chosen token count.
+    Every consumer runs to its stream terminator — a wedged (never
+    terminated) stream would hang this driver, which is exactly the
+    regression the chaos suite exists to catch (callers bound it with
+    ``asyncio.wait_for``)."""
+    from repro.serving.gateway import Rejected   # circular-safe at runtime
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    run = ChaosRun(completed=[], aborted=[], rejected=[], events=[],
+                   recovery_s=[])
+
+    async def one(sess: Session, at: float) -> None:
+        delay = at * time_scale - (loop.time() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        res = await gateway.submit(sess)
+        if isinstance(res, Rejected):
+            run.rejected.append(sess)
+            return
+        cut = plan.disconnect_at(sess.session_id)
+        tokens, cancel_t, errored = 0, None, False
+        async for ev in res.events():
+            run.events.append((loop.time() - t0, ev))
+            errored |= bool(getattr(ev, "error", False))
+            if not getattr(ev, "error", False):
+                tokens += 1
+            if cut is not None and tokens >= cut and cancel_t is None:
+                res.cancel()
+                cancel_t = loop.time()
+        if cancel_t is not None:
+            run.recovery_s.append(loop.time() - cancel_t)
+        if errored or sess.state == SessionState.ABORTED:
+            run.aborted.append(sess)
+        else:
+            run.completed.append(sess)
+
+    await asyncio.gather(*(one(s, float(a))
+                           for s, a in zip(sessions, arrivals)))
+    run.wall_s = loop.time() - t0
+    return run

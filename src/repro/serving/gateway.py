@@ -25,7 +25,16 @@ admission watermark.  The gateway owns:
     exhaustion (higher utilisation; the restore is lossless);
   * **admission** — a hysteretic ``WatermarkGate`` over queue + slot
     occupancy; ``reject`` mode sheds immediately (429), ``queue`` mode
-    waits briefly for the gate to reopen before shedding.
+    waits briefly for the gate to reopen before shedding;
+  * the **fault domain** (DESIGN.md §10) — per-session isolation: a
+    tool failure retries with timeout + exponential backoff and on
+    exhaustion either finishes the turn with scripted tokens or aborts
+    the session; an engine-side fault quarantines exactly the offending
+    session (``abort_session``) and its stream terminates with an error
+    event; client disconnects (``LiveSession.cancel()``) reclaim the
+    slot/pages promptly; KV-pressure deferrals tighten the admission
+    gate; and a crashed reactor loop fails every live stream loudly
+    instead of leaving consumers awaiting forever.
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ import numpy as np
 
 from repro.core.admission import WatermarkGate
 from repro.serving.reactor import EngineReactor, RequestHandle, TokenEvent
-from repro.serving.request import Session
+from repro.serving.request import Session, SessionState
 
 # tool_fn(session, completed_turn_idx) -> optional replacement tokens
 # for the *next* turn's prefill (a real tool's output); None keeps the
@@ -60,6 +69,27 @@ class GatewayConfig:
     idle_sleep_s: float = 0.001      # reactor loop sleep when no work
     step_in_thread: bool = True      # run engine.step off the event loop
     completed_history: int = 10_000  # finished Sessions kept for reports
+    # --- tool-call resilience (DESIGN.md §10) -------------------------
+    tool_timeout_s: float = 30.0     # per-attempt tool call bound
+    tool_retries: int = 2            # retries after the first attempt
+    tool_backoff_base_s: float = 0.05   # backoff = base * 2^attempt ...
+    tool_backoff_max_s: float = 2.0     # ... capped here ...
+    tool_backoff_jitter: float = 0.25   # ... +- this fraction (seeded rng)
+    tool_failure_policy: str = "finish_turn"  # on retry exhaustion:
+    #   finish_turn -> resume with the scripted next-turn tokens
+    #   abort       -> abort the session (terminal error event)
+    seed: int = 0                    # backoff-jitter rng seed
+    # --- deadlines & degradation --------------------------------------
+    default_deadline_s: float = float("inf")  # relative SLO deadline
+    #                                  applied at submit when the session
+    #                                  has none (inf = no deadline)
+    kv_pressure_tighten: int = -1    # watermark tightening while the
+    #                                  engine reports KVExhausted
+    #                                  deferrals (-1 = auto: high // 2)
+    kv_pressure_window: int = 50     # engine cycles a deferral stays hot
+    max_engine_errors: int = 8       # consecutive failed loop iterations
+    #                                  before the gateway fails all live
+    #                                  sessions and stops (never hangs)
 
 
 class GatewayState(enum.Enum):
@@ -68,6 +98,7 @@ class GatewayState(enum.Enum):
     TOOL_WAIT = "tool_wait"
     RESUME = "resume"
     DONE = "done"
+    FAILED = "failed"                # aborted: fault/deadline/disconnect
 
 
 @dataclasses.dataclass
@@ -81,20 +112,37 @@ class Rejected:
 class LiveSession:
     """Gateway-owned handle for one streaming agent session."""
 
-    def __init__(self, session: Session):
+    def __init__(self, session: Session, gateway: "AgentGateway"):
         self.session = session
+        self._gw = gateway
         self.handle: Optional[RequestHandle] = None
         self.state = GatewayState.PREFILL
         self.queue: "asyncio.Queue[Optional[TokenEvent]]" = asyncio.Queue()
         self.received: List[TokenEvent] = []
+        self.cancelled = False
+        self.tool_task: Optional[asyncio.Task] = None
 
     @property
     def session_id(self) -> int:
         return self.session.session_id
 
+    def cancel(self, reason: str = "disconnected") -> None:
+        """Client-side abort (disconnect): stage an abort op for the
+        reactor loop — the engine reclaims the slot/pages promptly and
+        the stream terminates with an error event.  Idempotent; a no-op
+        once the session is terminal."""
+        if self.cancelled or self.state in (GatewayState.DONE,
+                                            GatewayState.FAILED):
+            return
+        self.cancelled = True
+        self._gw.counters["cancelled"] += 1
+        self._gw._ops.append(("abort", self, reason))
+
     async def events(self) -> AsyncIterator[TokenEvent]:
         """Stream this session's tokens as they are decoded; terminates
-        after the final turn's last token."""
+        after the final turn's last token — or after a terminal *error*
+        event (``ev.error``) when the session was aborted (fault,
+        deadline, disconnect): consumers never await forever."""
         while True:
             ev = await self.queue.get()
             if ev is None:
@@ -108,7 +156,7 @@ class AgentGateway:
     concurrent streaming clients)."""
 
     def __init__(self, engine, config: Optional[GatewayConfig] = None,
-                 tool_fn: Optional[ToolFn] = None):
+                 tool_fn: Optional[ToolFn] = None, faults=None):
         self.engine = engine
         self.reactor = EngineReactor(engine)
         self.cfg = config or GatewayConfig()
@@ -116,25 +164,40 @@ class AgentGateway:
             raise ValueError(f"unknown tool_policy {self.cfg.tool_policy}")
         if self.cfg.admission not in ("reject", "queue"):
             raise ValueError(f"unknown admission mode {self.cfg.admission}")
+        if self.cfg.tool_failure_policy not in ("finish_turn", "abort"):
+            raise ValueError(
+                f"unknown tool_failure_policy {self.cfg.tool_failure_policy}")
         self.gate = WatermarkGate(self.cfg.high_watermark,
                                   self.cfg.low_watermark)
         self.tool_fn = tool_fn
+        # chaos plan (serving/faults.py): engine-side hooks installed
+        # here; the gateway consults the plan inside tool calls
+        self.faults = faults
+        if faults is not None:
+            engine.install_faults(faults)
         self._live: Dict[int, LiveSession] = {}
-        # engine ops staged by submit()/tool tasks, drained by the
-        # reactor loop between cycles — the engine is only ever touched
-        # from the loop, so no locking is needed
-        self._ops: Deque[Tuple[str, LiveSession]] = collections.deque()
+        # engine ops staged by submit()/tool tasks/cancel, drained by
+        # the reactor loop between cycles — the engine is only ever
+        # touched from the loop, so no locking is needed
+        self._ops: Deque[Tuple[str, LiveSession, Optional[str]]] = \
+            collections.deque()
         self._ids = itertools.count()
         self._task: Optional[asyncio.Task] = None
         self._running = False
         self._waiters = 0
         self._tool_tasks: set = set()
+        self._rng = np.random.default_rng(self.cfg.seed)  # backoff jitter
         # finished sessions, retained (bounded) for open-loop reporting
         # — the engine/reactor detach them at session_end
         self.completed_sessions: Deque[Session] = collections.deque(
             maxlen=self.cfg.completed_history)
+        # aborted sessions (fault/deadline/disconnect), same retention
+        self.failed_sessions: Deque[Session] = collections.deque(
+            maxlen=self.cfg.completed_history)
         self.counters = {"submitted": 0, "rejected": 0, "completed": 0,
-                         "parked": 0, "tool_calls": 0, "tool_errors": 0}
+                         "parked": 0, "tool_calls": 0, "tool_errors": 0,
+                         "aborted": 0, "cancelled": 0, "tool_retries": 0,
+                         "tool_timeouts": 0, "engine_errors": 0}
 
     # ---- lifecycle ----------------------------------------------------
     async def start(self) -> None:
@@ -145,7 +208,9 @@ class AgentGateway:
 
     async def stop(self, timeout_s: Optional[float] = None) -> None:
         """Stop accepting new work and drain in-flight sessions; cancel
-        the loop if the drain exceeds ``timeout_s``."""
+        the loop if the drain exceeds ``timeout_s``.  A timed-out drain
+        pushes a terminal error event to every live session's queue so
+        ``events()`` consumers unblock instead of hanging forever."""
         self._running = False
         if self._task is None:
             return
@@ -157,16 +222,50 @@ class AgentGateway:
                 await self._task
             except asyncio.CancelledError:
                 pass
+            self._fail_all_live("gateway_stopped")
         self._task = None
+
+    def _fail_all_live(self, reason: str) -> None:
+        """Terminate every live stream with an error event (and cancel
+        outstanding tool tasks) — the no-consumer-awaits-forever
+        backstop for loop death and drain timeouts."""
+        for task in list(self._tool_tasks):
+            task.cancel()
+        for sid, live in list(self._live.items()):
+            live.state = GatewayState.FAILED
+            live.session.abort_reason = live.session.abort_reason or reason
+            live.queue.put_nowait(TokenEvent(
+                session_id=sid, token=-1, t=self.engine.clock(),
+                turn_idx=live.session.turn_idx, index=-1,
+                session_end=True, error=True, abort_reason=reason))
+            live.queue.put_nowait(None)
+            self.counters["aborted"] += 1
+            self.failed_sessions.append(live.session)
+            del self._live[sid]
 
     # ---- admission ----------------------------------------------------
     def occupancy(self) -> int:
         return self.engine.admission_occupancy() + len(self._ops)
 
+    def _kv_pressure_gate(self) -> None:
+        """Tighten the admission watermark while the engine reports
+        KVExhausted deferrals — shed new load at the door instead of
+        deferring it inside (DESIGN.md §10 degradation ladder)."""
+        amount = self.cfg.kv_pressure_tighten
+        if amount < 0:
+            amount = self.cfg.high_watermark // 2
+        hot = self.engine.kv_pressure_recent(self.cfg.kv_pressure_window)
+        self.gate.set_pressure(amount if hot else 0)
+
     async def submit(self, session: Session,
+                     deadline_s: Optional[float] = None,
                      ) -> Union[LiveSession, Rejected]:
         """Admit a live agent session — or shed it at the watermark.
-        The returned ``LiveSession`` streams tokens via ``events()``."""
+        The returned ``LiveSession`` streams tokens via ``events()``.
+        ``deadline_s`` (relative seconds, overrides the config default)
+        arms an engine-enforced SLO deadline: past it the session is
+        aborted and its stream ends with an error event."""
+        self._kv_pressure_gate()
         occ = self.occupancy()
         if not self.gate.check(occ) and self.cfg.admission == "queue":
             occ = await self._wait_for_gate(occ)
@@ -175,9 +274,13 @@ class AgentGateway:
             return Rejected(occupancy=occ)
         session.session_id = next(self._ids)
         session.external_tools = True    # gateway owns the tool clock
-        live = LiveSession(session)
+        rel = (deadline_s if deadline_s is not None
+               else self.cfg.default_deadline_s)
+        if np.isfinite(rel):
+            session.deadline_s = self.engine.clock() + float(rel)
+        live = LiveSession(session, self)
         self._live[session.session_id] = live
-        self._ops.append(("submit", live))
+        self._ops.append(("submit", live, None))
         self.counters["submitted"] += 1
         return live
 
@@ -200,29 +303,78 @@ class AgentGateway:
 
     # ---- the reactor loop ---------------------------------------------
     async def _loop(self) -> None:
+        """The serialised engine loop, fault-isolated (DESIGN.md §10):
+        per-session faults are handled inside ``engine.step`` (quarantine
+        via ``abort_session``); anything that still escapes an iteration
+        is counted and retried — after ``max_engine_errors`` consecutive
+        failures the gateway fails every live stream loudly and exits
+        rather than leaving consumers blocked on silent streams."""
         cfg = self.cfg
+        errors_in_row = 0
         while self._running or self._ops or self.reactor.pending():
-            while self._ops:
-                op, live = self._ops.popleft()
-                if op == "submit":
-                    live.handle = self.reactor.submit(live.session)
-                else:                    # "resume"
-                    self.reactor.resume(live.handle)
-            self._park_under_pressure()
-            if cfg.step_in_thread:
-                events = await asyncio.to_thread(self.reactor.step)
-            else:
-                events = self.reactor.step()
-                await asyncio.sleep(0)   # let clients/timers breathe
-            for ev in events:
-                self._route(ev)
+            try:
+                self._drain_ops()
+                self._park_under_pressure()
+                if cfg.step_in_thread:
+                    events = await asyncio.to_thread(self.reactor.step)
+                else:
+                    events = self.reactor.step()
+                    await asyncio.sleep(0)   # let clients/timers breathe
+                for ev in events:
+                    self._route(ev)
+                errors_in_row = 0
+            except asyncio.CancelledError:
+                raise
+            except Exception:
+                self.counters["engine_errors"] += 1
+                errors_in_row += 1
+                if errors_in_row >= cfg.max_engine_errors:
+                    self._fail_all_live("engine_error")
+                    return
+                await asyncio.sleep(cfg.idle_sleep_s)
+                continue
             if not events and not self.reactor.did_work and not self._ops:
                 await asyncio.sleep(cfg.idle_sleep_s)
         self.engine.flush()
 
+    def _drain_ops(self) -> None:
+        """Apply staged submit/resume/abort ops to the engine, in FIFO
+        order (a session's abort can therefore never precede its own
+        submit).  Ops for already-terminal sessions are dropped — abort
+        racing completion, resume racing abort — so a stale op can never
+        corrupt another session's engine state."""
+        while self._ops:
+            op, live, arg = self._ops.popleft()
+            if op == "submit":
+                live.handle = self.reactor.submit(live.session)
+                continue
+            state = live.session.state
+            if state in (SessionState.FINISHED, SessionState.ABORTED):
+                continue                 # terminal: drop the stale op
+            if op == "resume":
+                if not live.cancelled:
+                    self.reactor.resume(live.handle)
+            else:                        # "abort" (cancel / tool failure)
+                if live.tool_task is not None:
+                    live.tool_task.cancel()
+                self.reactor.abort(live.handle, arg or "aborted")
+
     def _route(self, ev: TokenEvent) -> None:
         live = self._live.get(ev.session_id)
         if live is None:
+            return
+        if ev.error:
+            # terminal error event (abort_session): fail exactly this
+            # stream — deliver the event so the consumer sees the abort
+            # reason, then terminate the stream
+            live.state = GatewayState.FAILED
+            if live.tool_task is not None:
+                live.tool_task.cancel()  # e.g. a still-hanging tool
+            live.queue.put_nowait(ev)
+            live.queue.put_nowait(None)
+            self.counters["aborted"] += 1
+            self.failed_sessions.append(live.session)
+            del self._live[ev.session_id]
             return
         live.queue.put_nowait(ev)
         if ev.first:
@@ -237,6 +389,7 @@ class AgentGateway:
             live.state = GatewayState.TOOL_WAIT
             task = asyncio.get_running_loop().create_task(
                 self._tool_wait(live, ev.turn_idx))
+            live.tool_task = task
             self._tool_tasks.add(task)
             task.add_done_callback(self._tool_tasks.discard)
 
@@ -255,30 +408,84 @@ class AgentGateway:
                 self.engine.park_session(live.session_id)
                 self.counters["parked"] += 1
 
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with seeded jitter: base * 2^attempt,
+        capped, +- jitter fraction.  All on the gateway clock — engine
+        determinism is untouched."""
+        cfg = self.cfg
+        base = min(cfg.tool_backoff_base_s * (2 ** attempt),
+                   cfg.tool_backoff_max_s)
+        jitter = 1.0 + cfg.tool_backoff_jitter * float(
+            self._rng.uniform(-1.0, 1.0))
+        return max(0.0, base * jitter)
+
+    async def _call_tool(self, sess: Session, turn_idx: int,
+                         attempt: int) -> Optional[np.ndarray]:
+        """One tool-call attempt — the chaos plan may turn it into an
+        injected error or a hang (which the per-attempt timeout cuts)."""
+        if self.faults is not None:
+            from repro.serving.faults import InjectedFault
+            sp = self.faults.tool_fault(sess.session_id, turn_idx, attempt)
+            if sp is not None:
+                if sp.kind == "tool_hang":
+                    await asyncio.sleep(sp.hang_s)
+                raise InjectedFault(
+                    f"injected tool_error (session {sess.session_id} "
+                    f"turn {turn_idx} attempt {attempt})")
+        if self.tool_fn is not None:
+            return await self.tool_fn(sess, turn_idx)
+        await asyncio.sleep(sess.turns[turn_idx].tool_latency_s)
+        return None
+
+    async def _run_tool(self, live: LiveSession, turn_idx: int) -> bool:
+        """Tool-call resilience (DESIGN.md §10): per-attempt timeout,
+        bounded retries with exponential backoff + jitter.  Returns
+        whether any attempt succeeded."""
+        cfg, sess = self.cfg, live.session
+        attempts = 1 + max(0, cfg.tool_retries)
+        for attempt in range(attempts):
+            try:
+                next_tokens = await asyncio.wait_for(
+                    self._call_tool(sess, turn_idx, attempt),
+                    timeout=cfg.tool_timeout_s)
+                if next_tokens is not None:
+                    # a real tool's output replaces the next turn's
+                    # scripted prefill (safe: it hasn't started)
+                    sess.turns[turn_idx + 1].prefill_tokens = np.asarray(
+                        next_tokens, np.int32)
+                return True
+            except asyncio.CancelledError:
+                raise
+            except asyncio.TimeoutError:
+                self.counters["tool_timeouts"] += 1
+            except Exception:
+                pass
+            if attempt + 1 < attempts:
+                self.counters["tool_retries"] += 1
+                await asyncio.sleep(self._backoff_s(attempt))
+        self.counters["tool_errors"] += 1    # one per exhausted call
+        return False
+
     async def _tool_wait(self, live: LiveSession, turn_idx: int) -> None:
         """The tool half of an agent turn, on the gateway's clock.
 
-        A tool_fn failure must not wedge the session in TOOL_WAIT (the
-        client's stream would hang forever): the error is counted and
-        the session resumes with its scripted next-turn tokens."""
+        A tool failure must not wedge the session in TOOL_WAIT (the
+        client's stream would hang forever).  After retries are
+        exhausted the configured policy decides: ``finish_turn`` resumes
+        with the scripted next-turn tokens (degraded but complete);
+        ``abort`` terminates the session with an error event."""
         sess = live.session
         self.counters["tool_calls"] += 1
         try:
-            if self.tool_fn is not None:
-                next_tokens = await self.tool_fn(sess, turn_idx)
-                if next_tokens is not None:
-                    # a real tool's output replaces the next turn's
-                    # scripted prefill (safe: that prefill hasn't started)
-                    sess.turns[turn_idx + 1].prefill_tokens = np.asarray(
-                        next_tokens, np.int32)
-            else:
-                await asyncio.sleep(sess.turns[turn_idx].tool_latency_s)
+            ok = await self._run_tool(live, turn_idx)
         except asyncio.CancelledError:
             raise
-        except Exception:
-            self.counters["tool_errors"] += 1
+        live.tool_task = None
+        if not ok and self.cfg.tool_failure_policy == "abort":
+            self._ops.append(("abort", live, "tool_failed"))
+            return
         live.state = GatewayState.RESUME
-        self._ops.append(("resume", live))
+        self._ops.append(("resume", live, None))
 
     # ---- observability -------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -295,6 +502,12 @@ class AgentGateway:
             "live_sessions": float(len(self._live)),
             "engine_parks": float(self.engine.hotpath_stats["parks"]),
             "engine_unparks": float(self.engine.hotpath_stats["unparks"]),
+            # fault-domain counters (DESIGN.md §10)
+            "deadline_aborts": float(
+                self.engine.hotpath_stats["deadline_aborts"]),
+            "kv_deferred": float(self.engine.hotpath_stats["kv_deferred"]),
+            "gate_pressure": float(self.gate.pressure),
+            "failed_sessions": float(len(self.failed_sessions)),
         }
         pool = self.engine.pool
         if hasattr(pool, "free_pages"):   # paged layout (DESIGN.md §8)

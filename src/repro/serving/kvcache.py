@@ -43,6 +43,20 @@ from repro.configs.base import ModelConfig
 from repro.models import POSITIONAL_CACHE_KEYS, init_cache, num_kv_pages
 
 
+class KVExhausted(RuntimeError):
+    """Typed capacity fault: the pool has no free slot / page.
+
+    A ``RuntimeError`` subclass so legacy catches keep working, but
+    typed so the dispatcher can *degrade* — defer the op back to Q_P,
+    shed at the admission watermark — instead of letting one
+    over-committed cycle kill the serving loop (DESIGN.md §10)."""
+
+    def __init__(self, what: str, msg: str):
+        super().__init__(msg)
+        self.what = what          # "slot" | "page"
+        self.session_id = -1      # annotated at the dispatch site
+
+
 def _prefix_key(tokens: np.ndarray) -> str:
     return hashlib.sha1(np.ascontiguousarray(tokens, dtype=np.int32)
                         .tobytes()).hexdigest()
@@ -97,14 +111,20 @@ class KVCachePool:
         self.stats = {"alloc": 0, "free": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefix_refreshes": 0,
                       "evictions": 0, "parks": 0, "unparks": 0}
+        # chaos-injection point (serving/faults.py): called before every
+        # slot / page allocation with the allocation kind; a FaultPlan
+        # hook raises KVExhausted to simulate pressure deterministically
+        self.fault_hook: Optional[Any] = None
 
     def _init_cache(self, cfg, num_slots, max_seq, dtype):
         return init_cache(cfg, num_slots, max_seq, dtype)
 
     # ---- slot lifecycle -------------------------------------------------
     def alloc(self) -> int:
+        if self.fault_hook is not None:
+            self.fault_hook("slot")
         if not self._free:
-            raise RuntimeError("KV pool exhausted: no free slot")
+            raise KVExhausted("slot", "KV pool exhausted: no free slot")
         slot = min(self._free)
         self._free.discard(slot)
         self.lengths[slot] = 0
@@ -215,6 +235,13 @@ class KVCachePool:
 
     def _drop_entry(self, entry) -> None:
         """Entry-eviction hook (the paged pool releases page refs)."""
+
+    def release_entry(self, entry) -> None:
+        """Release a caller-owned (parked) entry without restoring it —
+        the abort path for a session parked in TOOL_WAIT.  Slab entries
+        are plain snapshots (GC handles them); the paged pool drops the
+        transferred page references."""
+        self._drop_entry(entry)
 
     # ---- tool-wait parking ----------------------------------------------
     def park(self, slot: int) -> PrefixEntry:
@@ -368,8 +395,10 @@ class PagedKVCachePool(KVCachePool):
         return len(self._free_pages)
 
     def _alloc_page(self) -> int:
+        if self.fault_hook is not None:
+            self.fault_hook("page")
         if not self._free_pages:
-            raise RuntimeError("KV page pool exhausted: no free page")
+            raise KVExhausted("page", "KV page pool exhausted: no free page")
         p = self._free_pages.pop()
         self.refcount[p] = 1
         self.stats["page_allocs"] += 1
@@ -419,19 +448,38 @@ class PagedKVCachePool(KVCachePool):
             return
         first = start // self.page_size
         last = self._npages(start + n)                # exclusive bound
-        for lp in range(first, min(last, self.pages_per_slot)):
-            page = int(self.block_table[slot, lp])
-            if page < 0:
-                self.block_table[slot, lp] = self._alloc_page()
-                self._bt_dev = None
-            elif self.refcount[page] > 1:
-                fresh = self._alloc_page()
-                self.cache = _fused_page_copy(self.cache, jnp.int32(page),
-                                              jnp.int32(fresh))
-                self._decref(page)
-                self.block_table[slot, lp] = fresh
-                self._bt_dev = None
-                self.stats["page_copies"] += 1
+        # an exhausted _alloc_page mid-call must not leak the pages this
+        # same call already claimed: record each mutation and unwind in
+        # reverse before re-raising, so a failed append leaves the table
+        # row, refcounts and free-page count exactly as found
+        undo: List[tuple] = []            # (lp, old_page, fresh_page)
+        try:
+            for lp in range(first, min(last, self.pages_per_slot)):
+                page = int(self.block_table[slot, lp])
+                if page < 0:
+                    fresh = self._alloc_page()
+                    self.block_table[slot, lp] = fresh
+                    self._bt_dev = None
+                    undo.append((lp, -1, fresh))
+                elif self.refcount[page] > 1:
+                    fresh = self._alloc_page()
+                    self.cache = _fused_page_copy(
+                        self.cache, jnp.int32(page), jnp.int32(fresh))
+                    self._decref(page)
+                    self.block_table[slot, lp] = fresh
+                    self._bt_dev = None
+                    self.stats["page_copies"] += 1
+                    undo.append((lp, page, fresh))
+        except KVExhausted:
+            for lp, old, fresh in reversed(undo):
+                if old >= 0:
+                    # the COW source kept refcount >= 1 (another holder),
+                    # so re-increfing cannot resurrect a freed page
+                    self._incref(old)
+                self._decref(fresh)       # refcount 1 -> 0: back to free
+                self.block_table[slot, lp] = old
+            self._bt_dev = None
+            raise
 
     def block_tables_device(self) -> jax.Array:
         """Device mirror of the block tables with ``-1`` entries mapped

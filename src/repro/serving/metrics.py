@@ -139,10 +139,15 @@ class OpenLoopReport:
     queue_delay_p50_s: float
     queue_delay_p95_s: float
     slo_attainment: float
+    aborted: int = 0                 # fault/deadline/disconnect terminals
+    # per-reason abort attribution (e.g. {"deadline": 3}) — a dict, so
+    # excluded from the CSV row
+    abort_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def row(self) -> str:
         return (f"{self.policy},{self.offered_rps:.3f},{self.submitted},"
-                f"{self.completed},{self.rejected},{self.wall_time_s:.3f},"
+                f"{self.completed},{self.rejected},{self.aborted},"
+                f"{self.wall_time_s:.3f},"
                 f"{self.goodput_tok_s:.1f},{self.throughput_tok_s:.1f},"
                 f"{self.ttft_p50_s * 1e3:.1f},{self.ttft_p95_s * 1e3:.1f},"
                 f"{self.tpot_p50_s * 1e3:.1f},{self.tpot_p95_s * 1e3:.1f},"
@@ -150,19 +155,32 @@ class OpenLoopReport:
                 f"{self.queue_delay_p95_s * 1e3:.1f},"
                 f"{self.slo_attainment:.3f}")
 
-    HEADER = ("policy,offered_rps,submitted,completed,rejected,wall_s,"
-              "goodput_tok_s,throughput_tok_s,ttft_p50_ms,ttft_p95_ms,"
-              "tpot_p50_ms,tpot_p95_ms,qdelay_p50_ms,qdelay_p95_ms,"
-              "slo_rate")
+    HEADER = ("policy,offered_rps,submitted,completed,rejected,aborted,"
+              "wall_s,goodput_tok_s,throughput_tok_s,ttft_p50_ms,"
+              "ttft_p95_ms,tpot_p50_ms,tpot_p95_ms,qdelay_p50_ms,"
+              "qdelay_p95_ms,slo_rate")
+
+
+def collect_abort_reasons(sessions: Sequence[Session]) -> Dict[str, int]:
+    """Per-reason histogram over aborted sessions (DESIGN.md §10) —
+    the per-session ``abort_reason`` is set by ``abort_session``."""
+    out: Dict[str, int] = {}
+    for s in sessions:
+        reason = getattr(s, "abort_reason", None)
+        if reason:
+            out[reason] = out.get(reason, 0) + 1
+    return out
 
 
 def build_open_loop_report(policy: str, sessions: Sequence[Session],
                            wall_time_s: float, offered_rps: float,
                            rejected: int = 0,
                            thresholds: Optional[SLOThresholds] = None,
+                           aborted_sessions: Sequence[Session] = (),
                            ) -> OpenLoopReport:
     """Open-loop rollup over the *completed* sessions of one offered-rate
-    run (rejected submissions are counted, not measured)."""
+    run (rejected submissions are counted, not measured; aborted
+    sessions contribute only their count and abort reason)."""
     ttfts = collect_open_loop_ttfts(sessions)
     tpots = collect_tpots(sessions)
     qdelays = collect_queue_delays(sessions)
@@ -178,9 +196,11 @@ def build_open_loop_report(policy: str, sessions: Sequence[Session],
     return OpenLoopReport(
         policy=policy,
         offered_rps=offered_rps,
-        submitted=len(sessions) + rejected,
+        submitted=len(sessions) + rejected + len(aborted_sessions),
         completed=len(sessions),
         rejected=rejected,
+        aborted=len(aborted_sessions),
+        abort_reasons=collect_abort_reasons(aborted_sessions),
         wall_time_s=wall_time_s,
         goodput_tok_s=good_tokens / wall,
         throughput_tok_s=total_tokens / wall,

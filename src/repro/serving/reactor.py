@@ -41,6 +41,11 @@ class TokenEvent:
     first: bool = False          # first token of a burst (TTFT event)
     turn_end: bool = False       # burst complete -> tool call next
     session_end: bool = False    # final token of the final turn
+    # fault-domain terminal (DESIGN.md §10): an aborted session's last
+    # event carries error=True (token == -1) so stream consumers
+    # distinguish failure from completion; abort_reason attributes it
+    error: bool = False
+    abort_reason: str = ""
 
 
 class HandleStatus(enum.Enum):
@@ -49,6 +54,7 @@ class HandleStatus(enum.Enum):
     DECODE = "decode"
     TOOL_WAIT = "tool_wait"      # burst done; waiting on the tool clock
     DONE = "done"
+    FAILED = "failed"            # aborted: fault / deadline / disconnect
 
 
 _STATE_TO_STATUS = {
@@ -59,6 +65,7 @@ _STATE_TO_STATUS = {
     SessionState.TOOL_CALL: HandleStatus.TOOL_WAIT,
     SessionState.TOOL_WAIT: HandleStatus.TOOL_WAIT,
     SessionState.FINISHED: HandleStatus.DONE,
+    SessionState.ABORTED: HandleStatus.FAILED,
 }
 
 
@@ -145,6 +152,13 @@ class EngineReactor:
         """Release the session's KV slot while it waits on a tool (the
         under-pressure policy); the resume path restores it losslessly."""
         self.engine.park_session(handle.session_id)
+
+    def abort(self, handle: RequestHandle, reason: str = "aborted") -> bool:
+        """Quarantine one session: reclaim its slot/pages and emit its
+        terminal error event (delivered by the next ``step()``).  False
+        when the session already reached a terminal state — abort races
+        against completion are benign."""
+        return self.engine.abort_session(handle.session_id, reason)
 
     # ---- convenience --------------------------------------------------
     def drain(self, max_wall_s: float = 300.0,

@@ -19,6 +19,8 @@ class SessionState(enum.Enum):
     TOOL_WAIT = "tool_wait"               # gateway-clocked tool wait:
     #                                       resume_session() re-arms it
     FINISHED = "finished"
+    ABORTED = "aborted"                   # terminal: fault / deadline /
+    #                                       disconnect (abort_reason says)
 
 
 @dataclasses.dataclass
@@ -48,6 +50,10 @@ class Session:
     last_token: int = 0
     arrival_s: float = 0.0            # current request submission time
     ready_s: float = 0.0              # when the session may next be served
+    deadline_s: float = float("inf")  # absolute engine-clock SLO deadline:
+    #                                   the engine aborts the session past
+    #                                   it (the gateway sets it at submit)
+    abort_reason: Optional[str] = None  # terminal fault attribution
     # metrics bookkeeping
     request_arrivals: List[float] = dataclasses.field(default_factory=list)
     first_token_s: List[float] = dataclasses.field(default_factory=list)

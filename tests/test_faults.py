@@ -1,0 +1,478 @@
+"""Fault domains (DESIGN.md §10): session isolation, tool-call
+resilience, KV-pressure degradation, deadlines/disconnects, and the
+deterministic chaos harness.
+
+The load-bearing claim: any single-session fault degrades exactly one
+session.  Every isolation assertion therefore checks both sides — the
+faulted session reaches a terminal state (no consumer awaits forever)
+AND the unfaulted sessions' streams stay token-identical to the greedy
+oracle, with the pool's slots/pages fully reclaimed afterwards."""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _serving_util import events_by_session, oracle_streams
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import (ChaosRun, FaultPlan, FaultSpec,
+                                  drive_chaos)
+from repro.serving.gateway import AgentGateway, GatewayConfig, Rejected
+from repro.serving.kvcache import KVExhausted, PagedKVCachePool
+from repro.serving.metrics import OpenLoopReport, build_open_loop_report
+from repro.serving.policies import POLICIES
+from repro.serving.request import SessionState
+from repro.serving.workload import make_open_loop_workload
+
+TINY = ModelConfig(name="tiny-faults", family="dense", num_layers=2,
+                   d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                   vocab_size=128, tie_embeddings=True, source="test")
+TINY_PAGED = dataclasses.replace(TINY, name="tiny-faults-paged",
+                                 kv_layout="paged", kv_page_size=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _engine(params, *, cfg=TINY, num_slots=4, kv_defer_limit=8):
+    ecfg = EngineConfig(num_slots=num_slots, max_seq=512, cycle_budget=80,
+                        granularity=8, b_min=8, b_max=128, b_init=32,
+                        delta_b=8, control_interval_s=0.05,
+                        max_wall_s=float("inf"),
+                        kv_defer_limit=kv_defer_limit)
+    return ServingEngine(cfg, params, POLICIES["agentserve"], ecfg)
+
+
+def _sessions(n, *, seed=0, rate=8.0):
+    return make_open_loop_workload(n, workload="react",
+                                   vocab_size=TINY.vocab_size,
+                                   token_scale=0.0625, seed=seed,
+                                   rate_rps=rate)
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: mixed faults, one run, both sides of the isolation
+# claim
+# ---------------------------------------------------------------------------
+
+def test_chaos_mixed_faults_isolated_and_reclaimed(tiny_params):
+    """One seeded chaos run over the paged engine mixing every fault
+    kind: a recoverable tool error (retry succeeds), a hanging tool
+    (timeouts exhaust -> abort policy), an engine step fault
+    (quarantine), a client disconnect, and a page-exhaustion burst
+    (transparent deferral).  Unfaulted sessions must stream
+    token-identically to the fault-free oracle; faulted sessions must
+    reach a terminal state; the pool must reclaim every slot and leak
+    no pages."""
+    eng = _engine(tiny_params, cfg=TINY_PAGED)
+    plan = FaultPlan((
+        FaultSpec(kind="tool_error", session_id=1, attempts=1),  # recovers
+        FaultSpec(kind="tool_hang", session_id=2),               # aborts
+        FaultSpec(kind="step_error", session_id=3, at_count=2),
+        FaultSpec(kind="disconnect", session_id=4, at_token=3),
+        FaultSpec(kind="page_exhaustion", at_count=10, count=2),
+    ), seed=7)
+    gw = AgentGateway(eng, GatewayConfig(
+        high_watermark=32, tool_timeout_s=0.5, tool_retries=1,
+        tool_backoff_base_s=0.01, tool_failure_policy="abort"),
+        faults=plan)
+    sessions = _sessions(6)
+    arrivals = [0.05 * i for i in range(6)]
+
+    async def go():
+        await gw.start()
+        run = await asyncio.wait_for(
+            drive_chaos(gw, sessions, arrivals, plan), timeout=120.0)
+        await gw.stop(timeout_s=60.0)
+        return run
+
+    run: ChaosRun = asyncio.run(go())
+    # submissions happened in arrival order, so plan sids == list index
+    assert [s.session_id for s in sessions] == list(range(6))
+
+    # every stream reached a terminal state — nothing wedged
+    assert run.wedged() == 0
+    assert not run.rejected
+    assert {s.session_id for s in run.aborted} == {2, 3, 4}
+    assert {s.session_id for s in run.completed} == {0, 1, 5}
+
+    # the unfaulted (and retry-recovered) sessions are token-identical
+    # to the fault-free greedy reference
+    streams = run.streams()
+    want = oracle_streams(TINY_PAGED, tiny_params, sessions,
+                          num_slots=4, max_seq=512)
+    for sid in (0, 1, 5):
+        assert streams[sid] == want[sid], f"session {sid} diverged"
+    # a quarantined session's partial stream is a prefix of the oracle
+    got3 = streams.get(3, [])
+    assert got3 == want[3][:len(got3)]
+
+    # abort attribution
+    reasons = {s.session_id: s.abort_reason for s in run.aborted}
+    assert reasons[2] == "tool_failed"
+    assert reasons[3] == "injected_step_error"
+    assert reasons[4] == "disconnected"
+    assert all(s.state == SessionState.ABORTED for s in run.aborted)
+    assert len(run.recovery_s) == 1 and run.recovery_s[0] < 60.0
+
+    # fault accounting
+    assert gw.counters["aborted"] == 3
+    assert gw.counters["cancelled"] == 1
+    assert gw.counters["tool_retries"] >= 1      # session 1 recovered
+    assert gw.counters["tool_timeouts"] >= 2     # session 2 hung twice
+    assert plan.injected["step_error"] == 1
+    assert plan.injected["page_exhaustion"] >= 1
+    assert eng.hotpath_stats["kv_deferred"] >= 1
+    assert eng.hotpath_stats["aborted"] == 3
+    stats = gw.stats()
+    assert stats["aborted"] == 3.0 and stats["kv_deferred"] >= 1.0
+
+    # resource reclamation: every slot free, no page held outside the
+    # prefix cache, allocated count consistent with the refcounts
+    pool = eng.pool
+    assert pool.free_slots == eng.ecfg.num_slots
+    prefix_refs = sum(len(e.pages) for e in pool._prefix.values())
+    assert int(pool.refcount.sum()) == prefix_refs
+    assert pool.num_pages - pool.free_pages == int(
+        np.count_nonzero(pool.refcount))
+
+
+# ---------------------------------------------------------------------------
+# tool-call resilience
+# ---------------------------------------------------------------------------
+
+def test_tool_retry_recovers_token_exact(tiny_params):
+    """A tool that fails once per call recovers on retry: the session
+    completes token-exactly, with retries counted and zero errors."""
+    eng = _engine(tiny_params)
+    calls = {}
+
+    async def flaky(sess, turn_idx):
+        k = (sess.session_id, turn_idx)
+        calls[k] = calls.get(k, 0) + 1
+        if calls[k] == 1:
+            raise RuntimeError("flaky")
+        return None
+
+    gw = AgentGateway(eng, GatewayConfig(
+        high_watermark=32, tool_retries=2, tool_backoff_base_s=0.01),
+        tool_fn=flaky)
+    sessions = _sessions(1, seed=5)
+
+    async def go():
+        await gw.start()
+        run = await drive_chaos(gw, sessions, [0.0], FaultPlan())
+        await gw.stop(timeout_s=60.0)
+        return run
+
+    run = asyncio.run(go())
+    assert len(run.completed) == 1 and not run.aborted
+    n_tools = len(sessions[0].turns) - 1
+    assert gw.counters["tool_retries"] == n_tools
+    assert gw.counters["tool_errors"] == 0
+    streams = run.streams()
+    want = oracle_streams(TINY, tiny_params, sessions,
+                          num_slots=4, max_seq=512)
+    assert streams[sessions[0].session_id] == want[sessions[0].session_id]
+
+
+def test_tool_timeout_abort_policy_reclaims_slot(tiny_params):
+    """tool_failure_policy='abort': a tool that hangs past the timeout
+    on every attempt aborts the session — terminal error event, slot
+    reclaimed, timeouts counted."""
+    eng = _engine(tiny_params)
+
+    async def hang(sess, turn_idx):
+        await asyncio.sleep(60.0)
+        return None
+
+    gw = AgentGateway(eng, GatewayConfig(
+        high_watermark=32, tool_timeout_s=0.1, tool_retries=1,
+        tool_backoff_base_s=0.01, tool_failure_policy="abort"),
+        tool_fn=hang)
+    sessions = _sessions(1, seed=3)
+
+    async def go():
+        await gw.start()
+        run = await asyncio.wait_for(
+            drive_chaos(gw, sessions, [0.0], FaultPlan()), timeout=60.0)
+        await gw.stop(timeout_s=60.0)
+        return run
+
+    run = asyncio.run(go())
+    assert not run.completed and len(run.aborted) == 1
+    s = run.aborted[0]
+    assert s.state == SessionState.ABORTED
+    assert s.abort_reason == "tool_failed"
+    assert gw.counters["tool_timeouts"] == 2      # 1 attempt + 1 retry
+    assert gw.counters["tool_errors"] == 1        # once per exhausted call
+    assert eng.pool.free_slots == eng.ecfg.num_slots
+    # the terminal error event reached the client stream
+    last = run.events[-1][1]
+    assert last.error and last.abort_reason == "tool_failed"
+
+
+def test_bad_tool_failure_policy_rejected(tiny_params):
+    with pytest.raises(ValueError):
+        AgentGateway(_engine(tiny_params),
+                     GatewayConfig(tool_failure_policy="explode"))
+
+
+# ---------------------------------------------------------------------------
+# deadlines & disconnects
+# ---------------------------------------------------------------------------
+
+def test_deadline_abort_is_planner_visible(tiny_params):
+    """A submit-time SLO deadline in the past aborts the session on the
+    next cycle (reason='deadline'); a generous deadline completes."""
+    eng = _engine(tiny_params)
+    gw = AgentGateway(eng, GatewayConfig(high_watermark=32))
+    doomed, fine = _sessions(2, seed=8)
+
+    async def go():
+        await gw.start()
+        res_d = await gw.submit(doomed, deadline_s=0.0)
+        res_f = await gw.submit(fine, deadline_s=600.0)
+        evs_d = [ev async for ev in res_d.events()]
+        evs_f = [ev async for ev in res_f.events()]
+        await gw.stop(timeout_s=60.0)
+        return evs_d, evs_f
+
+    evs_d, evs_f = asyncio.run(go())
+    assert evs_d and evs_d[-1].error
+    assert evs_d[-1].abort_reason == "deadline"
+    assert doomed.state == SessionState.ABORTED
+    assert fine.state == SessionState.FINISHED
+    assert not any(ev.error for ev in evs_f)
+    assert eng.hotpath_stats["deadline_aborts"] == 1
+    assert gw.stats()["deadline_aborts"] == 1.0
+    assert eng.pool.free_slots == eng.ecfg.num_slots
+
+
+def test_cancel_mid_stream_reclaims_promptly(tiny_params):
+    """LiveSession.cancel() (client disconnect) terminates the stream
+    with an error event and frees the slot while other sessions keep
+    streaming token-exactly."""
+    eng = _engine(tiny_params)
+    gw = AgentGateway(eng, GatewayConfig(high_watermark=32))
+    sessions = _sessions(2, seed=4)
+    plan = FaultPlan((FaultSpec(kind="disconnect", session_id=0,
+                                at_token=2),))
+
+    async def go():
+        await gw.start()
+        run = await asyncio.wait_for(
+            drive_chaos(gw, sessions, [0.0, 0.05], plan), timeout=60.0)
+        await gw.stop(timeout_s=60.0)
+        return run
+
+    run = asyncio.run(go())
+    assert {s.session_id for s in run.aborted} == {0}
+    assert run.aborted[0].abort_reason == "disconnected"
+    assert gw.counters["cancelled"] == 1
+    assert len(run.completed) == 1
+    survivor = run.completed[0]
+    streams = run.streams()
+    want = oracle_streams(TINY, tiny_params, sessions,
+                          num_slots=4, max_seq=512)
+    assert streams[survivor.session_id] == want[survivor.session_id]
+    assert eng.pool.free_slots == eng.ecfg.num_slots
+
+
+# ---------------------------------------------------------------------------
+# admission under pressure
+# ---------------------------------------------------------------------------
+
+def test_watermark_queue_timeout_sheds(tiny_params):
+    """Queue-mode admission: a waiter that never sees the gate reopen is
+    shed with a 429-style Rejected after queue_timeout_s."""
+    eng = _engine(tiny_params)
+    gw = AgentGateway(eng, GatewayConfig(
+        high_watermark=1, low_watermark=0, admission="queue",
+        queue_timeout_s=0.05))
+    first, second = _sessions(2, seed=10)
+
+    async def go():
+        # gateway deliberately NOT started: the staged submit op keeps
+        # occupancy pinned >= 1, so the gate can never reopen
+        res1 = await gw.submit(first)
+        res2 = await gw.submit(second)
+        return res1, res2
+
+    res1, res2 = asyncio.run(go())
+    assert not isinstance(res1, Rejected)
+    assert isinstance(res2, Rejected)
+    assert res2.status == 429
+    assert gw.counters["rejected"] == 1
+
+
+def test_kv_pressure_tightens_gate(tiny_params):
+    """A recent KVExhausted deferral tightens the effective admission
+    watermark; the pressure clears once the window passes."""
+    eng = _engine(tiny_params)
+    gw = AgentGateway(eng, GatewayConfig(high_watermark=8,
+                                         kv_pressure_tighten=6))
+    assert gw.gate.effective_high() == 8
+    eng.hotpath_stats["kv_deferred"] += 1
+    eng._kv_last_defer_cycle = eng._cycle     # deferral "this cycle"
+    gw._kv_pressure_gate()
+    assert gw.gate.pressure == 6
+    assert gw.gate.effective_high() == max(gw.gate.low + 1, 2)
+    eng._cycle += 1000                        # window long past
+    gw._kv_pressure_gate()
+    assert gw.gate.pressure == 0 and gw.gate.effective_high() == 8
+
+
+# ---------------------------------------------------------------------------
+# stop() drain timeout: consumers never hang
+# ---------------------------------------------------------------------------
+
+def test_stop_timeout_fails_live_streams(tiny_params):
+    """A drain timeout (e.g. a tool that never returns, with a timeout
+    too large to trip) pushes terminal error events so every events()
+    consumer unblocks."""
+    eng = _engine(tiny_params)
+
+    async def never(sess, turn_idx):
+        await asyncio.sleep(3600.0)
+        return None
+
+    gw = AgentGateway(eng, GatewayConfig(high_watermark=32,
+                                         tool_timeout_s=3600.0),
+                      tool_fn=never)
+    sessions = _sessions(1, seed=2)
+
+    async def go():
+        await gw.start()
+        res = await gw.submit(sessions[0])
+        consumer = asyncio.ensure_future(
+            _collect(res))
+        # wait until the session is parked in TOOL_WAIT
+        for _ in range(2000):
+            if gw.counters["tool_calls"] >= 1:
+                break
+            await asyncio.sleep(0.01)
+        assert gw.counters["tool_calls"] >= 1
+        await gw.stop(timeout_s=0.3)
+        return await asyncio.wait_for(consumer, timeout=10.0)
+
+    async def _collect(res):
+        return [ev async for ev in res.events()]
+
+    evs = asyncio.run(go())
+    assert evs and evs[-1].error
+    assert evs[-1].abort_reason == "gateway_stopped"
+    assert gw.counters["aborted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# paged pool: prepare_append rollback on mid-call exhaustion
+# ---------------------------------------------------------------------------
+
+def _paged_pool(num_pages, num_slots=4, max_seq=64):
+    cfg = dataclasses.replace(TINY, name="tiny-rollback",
+                              kv_layout="paged", kv_page_size=8)
+    return PagedKVCachePool(cfg, num_slots, max_seq, num_pages=num_pages)
+
+
+def test_prepare_append_rollback_plain_alloc():
+    """Exhaustion mid-append (plain allocations) must unwind the pages
+    the same call already claimed: table row, refcounts and free count
+    exactly as before."""
+    pool = _paged_pool(num_pages=4)
+    slot = pool.alloc()
+    pool.prepare_append(slot, 0, 3 * 8)      # 3 pages
+    assert pool.free_pages == 1
+    table_before = pool.block_table.copy()
+    ref_before = pool.refcount.copy()
+    with pytest.raises(KVExhausted):
+        pool.prepare_append(slot, 3 * 8, 3 * 8)   # needs 3, has 1
+    assert pool.free_pages == 1
+    np.testing.assert_array_equal(pool.block_table, table_before)
+    np.testing.assert_array_equal(pool.refcount, ref_before)
+    pool.free(slot)
+    assert pool.free_pages == 4
+
+
+def test_prepare_append_rollback_cow():
+    """Exhaustion mid-COW must re-increment the shared source page and
+    restore the table mapping — the sharing session keeps its data and
+    nothing leaks."""
+    pool = _paged_pool(num_pages=3)
+    s0 = pool.alloc()
+    pool.prepare_append(s0, 0, 16)           # 2 pages
+    pool.lengths[s0] = 16
+    tokens = np.arange(16, dtype=np.int32)
+    pool.register_prefix(s0, tokens)         # refs: slot0 + prefix
+    s1 = pool.alloc()
+    entry = pool.lookup(tokens)
+    pool.restore_prefix(s1, entry)           # refs: + slot1 == 3 each
+    assert pool.free_pages == 1
+    shared = pool.block_table[s1, :2].copy()
+    ref_before = pool.refcount.copy()
+    # both pages are shared -> COW both; only one free page exists, so
+    # the second copy hits KVExhausted and the first must roll back
+    with pytest.raises(KVExhausted):
+        pool.prepare_append(s1, 0, 16)
+    assert pool.free_pages == 1
+    np.testing.assert_array_equal(pool.block_table[s1, :2], shared)
+    np.testing.assert_array_equal(pool.refcount, ref_before)
+    pool.free(s1)
+    pool.free(s0)
+    assert int(pool.refcount.sum()) == sum(
+        len(e.pages) for e in pool._prefix.values())
+
+
+def test_pool_fault_hook_injects_exhaustion():
+    """The chaos plan's pool_hook fails exactly the planned allocation
+    indices — and alloc state is untouched by an injected failure."""
+    pool = _paged_pool(num_pages=8)
+    plan = FaultPlan((FaultSpec(kind="page_exhaustion", at_count=1,
+                                count=2),))
+    pool.fault_hook = plan.pool_hook
+    slot = pool.alloc()
+    pool.prepare_append(slot, 0, 8)          # alloc #0: fine
+    with pytest.raises(KVExhausted):
+        pool.prepare_append(slot, 8, 8)      # alloc #1: injected
+    with pytest.raises(KVExhausted):
+        pool.prepare_append(slot, 8, 8)      # alloc #2: injected
+    pool.prepare_append(slot, 8, 8)          # alloc #3: past the burst
+    assert plan.injected["page_exhaustion"] == 2
+    assert pool.free_pages == 8 - 2
+
+
+# ---------------------------------------------------------------------------
+# fault plan determinism + reporting
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_generate_deterministic():
+    kw = dict(tool_error_rate=0.2, tool_hang_rate=0.1,
+              step_error_rate=0.1, disconnect_rate=0.1,
+              page_fault_bursts=2)
+    a = FaultPlan.generate(11, 40, **kw)
+    b = FaultPlan.generate(11, 40, **kw)
+    assert a.specs == b.specs
+    assert a.specs != FaultPlan.generate(12, 40, **kw).specs
+    # at most one fault per session
+    sids = [sp.session_id for sp in a.specs if sp.session_id >= 0]
+    assert len(sids) == len(set(sids))
+
+
+def test_open_loop_report_counts_aborts(tiny_params):
+    """The abort column rides the CSV row (header parity) and the
+    per-reason histogram attributes every aborted session."""
+    sessions = _sessions(3, seed=1)
+    sessions[1].abort_reason = "deadline"
+    sessions[2].abort_reason = "disconnected"
+    rep = build_open_loop_report("agentserve", sessions[:1], 1.0, 2.0,
+                                 rejected=1,
+                                 aborted_sessions=sessions[1:])
+    assert rep.aborted == 2
+    assert rep.submitted == 1 + 1 + 2
+    assert rep.abort_reasons == {"deadline": 1, "disconnected": 1}
+    assert len(rep.row().split(",")) == len(OpenLoopReport.HEADER.split(","))
