@@ -90,6 +90,12 @@ def run_rate(cfg, params, args, fault_rate: float) -> dict:
     assert pool.free_slots == ecfg.num_slots, "leaked KV slot"
     prefix_refs = sum(len(e.pages) for e in pool._prefix.values())
     assert int(pool.refcount.sum()) == prefix_refs, "leaked page refs"
+    # telemetry invariant (DESIGN.md §11): every terminal — DONE,
+    # tool_failed, disconnected, kv_exhausted, step faults — must have
+    # closed its session and slot spans; a faulted run may leak none
+    tracer = engine.telemetry.tracer
+    assert tracer is not None and tracer.open_span_count() == 0, \
+        f"leaked spans after faulted run: {tracer.open_spans()}"
 
     tokens = sum(len(v) for v in run.streams().values())
     good_tokens = sum(len(run.streams().get(s.session_id, []))

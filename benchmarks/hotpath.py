@@ -14,10 +14,17 @@ Measures, on the quickstart (smollm-360m smoke) config:
 and emits ``BENCH_hotpath.json`` with decode tokens/s, per-token
 dispatch overhead (per-token time minus the megastep floor) and resume
 throughput — the perf trajectory anchor for DESIGN.md §3.
+
+It also runs a full ``ServingEngine`` workload to capture the
+*measured* dispatch-gap histogram (host gap between consecutive decode
+dispatches, p50/p95/p99 — the ROADMAP host-overhead item) and the
+telemetry-overhead self-check: best-of-N paired runs with span tracing
+on vs ``telemetry=False``, asserted <2% under ``--smoke``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -27,8 +34,10 @@ import numpy as np
 
 from repro.configs.base import get_smoke_config
 from repro.models import init_params
-from repro.serving.engine import EngineConfig, get_executables
+from repro.serving.engine import EngineConfig, ServingEngine, \
+    get_executables
 from repro.serving.kvcache import KVCachePool
+from repro.serving.workload import make_workload
 
 ECFG = EngineConfig(num_slots=8, max_seq=512, cycle_budget=160,
                     granularity=16, b_min=16, b_max=256, b_init=64)
@@ -150,6 +159,58 @@ def bench_resume(cfg, params, ex, reps):
     return out
 
 
+def _engine_run(cfg, params, telemetry: bool, agents: int,
+                token_scale: float):
+    """One closed-loop engine run; returns (tok/s, report, engine)."""
+    ecfg = dataclasses.replace(ECFG, telemetry=telemetry,
+                               control_interval_s=0.1)
+    eng = ServingEngine(cfg, params, "agentserve", ecfg)
+    sessions = make_workload(agents, workload="react",
+                             vocab_size=cfg.vocab_size,
+                             token_scale=token_scale,
+                             num_system_prompts=1, seed=0)
+    rep = eng.run(sessions)
+    return rep.throughput_tok_s, rep, eng
+
+
+def bench_engine_telemetry(cfg, params, *, agents: int,
+                           token_scale: float, reps: int):
+    """Dispatch-gap histogram + telemetry-overhead self-check.
+
+    Overhead runs are *interleaved* (on, off, on, off, ...) and
+    compared best-vs-best so machine noise (CI neighbours, thermal
+    drift) hits both arms equally instead of biasing one."""
+    best_on, best_off = 0.0, 0.0
+    gap_stats = None
+    report_on = None
+    for _ in range(reps):
+        tok_on, rep, eng = _engine_run(cfg, params, True, agents,
+                                       token_scale)
+        if tok_on > best_on:
+            best_on, report_on = tok_on, rep
+            gap_stats = eng.stats()
+        tok_off, _, _ = _engine_run(cfg, params, False, agents,
+                                    token_scale)
+        best_off = max(best_off, tok_off)
+    overhead_pct = (best_off - best_on) / best_off * 100.0
+    report_on.telemetry_overhead_pct = overhead_pct
+    return {
+        "agents": agents, "token_scale": token_scale, "runs": reps,
+        "dispatch_gap_ms": {
+            "p50": gap_stats["dispatch_gap_s_p50"] * 1e3,
+            "p95": gap_stats["dispatch_gap_s_p95"] * 1e3,
+            "p99": gap_stats["dispatch_gap_s_p99"] * 1e3,
+            "count": gap_stats["dispatch_gap_s_count"],
+        },
+        "device_wait_ms_p95": gap_stats["device_wait_s_p95"] * 1e3,
+        "cycle_host_ms_p95": gap_stats["cycle_host_s_p95"] * 1e3,
+        "telemetry_overhead": {
+            "on_tok_s_best": best_on, "off_tok_s_best": best_off,
+            "overhead_pct": overhead_pct,
+        },
+    }, report_on
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=0,
@@ -178,6 +239,10 @@ def main():
     t_fused = bench_fused_steps(cfg, params, ex, steps)
     t_mega = bench_megastep(cfg, params, ex, steps)
     resume = bench_resume(cfg, params, ex, args.resume_reps)
+    engine_reps = 2 if args.smoke else 5
+    engine, rep_on = bench_engine_telemetry(
+        cfg, params, agents=ACTIVE,
+        token_scale=0.0625 if args.smoke else 0.125, reps=engine_reps)
 
     def tok_s(t):
         return ACTIVE / t
@@ -202,6 +267,7 @@ def main():
             },
         },
         "resume": resume,
+        "engine": engine,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -214,6 +280,19 @@ def main():
     print(f"resume tok/s  serial={resume['serial']['tok_s']:.0f}  "
           f"batched={resume['batched']['tok_s']:.0f} "
           f"({resume['speedup_batched_vs_serial']:.2f}x)")
+    g = engine["dispatch_gap_ms"]
+    ov = engine["telemetry_overhead"]
+    print(f"dispatch gap ms  p50={g['p50']:.3f} p95={g['p95']:.3f} "
+          f"p99={g['p99']:.3f} (n={g['count']:.0f})")
+    from repro.serving.metrics import ServingReport
+    print(ServingReport.HEADER)
+    print(rep_on.row(), flush=True)
+    print(f"telemetry overhead {ov['overhead_pct']:.2f}% "
+          f"(on={ov['on_tok_s_best']:.1f} off={ov['off_tok_s_best']:.1f} "
+          f"tok/s, best of {engine['runs']})")
+    if args.smoke:
+        assert ov["overhead_pct"] < 2.0, \
+            f"telemetry overhead {ov['overhead_pct']:.2f}% >= 2%"
     print(f"wrote {args.out}")
 
 

@@ -221,8 +221,16 @@ class ColdOp:
 
 @dataclasses.dataclass(frozen=True)
 class CyclePlan:
-    """Everything one engine cycle will do, decided up front."""
+    """Everything one engine cycle will do, decided up front.
+
+    ``plan_id`` is the telemetry/journal correlation key: the engine
+    stamps it with the cycle index at execution time when it is still
+    the -1 sentinel, and leaves recorded ids untouched — so a
+    ``ReplayPlanner`` run re-executes plans under their *original* ids
+    and its exported timeline can be diffed span-for-span against the
+    source run's."""
     control: ControlAction = ControlAction()
+    plan_id: int = -1                # stamped by the engine at execution
     slot_level: int = 0              # decode-reservation level to bind
     admissions: Tuple[Admission, ...] = ()
     preempt: Tuple[int, ...] = ()    # suspend these cold prefills

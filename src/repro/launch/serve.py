@@ -10,7 +10,8 @@ Two modes:
     exposes a minimal stdlib HTTP/SSE front —
 
         GET  /healthz      liveness
-        GET  /stats        gateway counters + occupancy
+        GET  /stats        unified telemetry registry snapshot (JSON)
+        GET  /metrics      the same registry, Prometheus text format
         POST /v1/session   submit an agent session; streams one
                            ``data: {...}`` SSE line per token, a final
                            ``event: done`` record, or HTTP 429 when the
@@ -41,6 +42,9 @@ from repro.serving.gateway import AgentGateway, GatewayConfig, Rejected
 from repro.serving.metrics import (OpenLoopReport, ServingReport,
                                    SLOThresholds, build_open_loop_report)
 from repro.serving.policies import PLANNERS, POLICIES
+from repro.serving.telemetry import (parse_prometheus_text,
+                                     reconstruct_latency,
+                                     validate_trace_events)
 from repro.serving.workload import (SPECS, make_session, make_workload,
                                     poisson_arrivals)
 
@@ -121,6 +125,10 @@ async def handle_connection(gateway: AgentGateway, mcfg,
             writer.write(_json_resp(200, {"ok": True}))
         elif method == "GET" and path == "/stats":
             writer.write(_json_resp(200, gateway.stats()))
+        elif method == "GET" and path == "/metrics":
+            text = gateway.engine.telemetry.registry.prometheus_text()
+            writer.write(_http_resp(200, text.encode(),
+                                    "text/plain; version=0.0.4"))
         elif method == "POST" and path == "/v1/session":
             try:
                 spec = json.loads(body or b"{}")
@@ -247,6 +255,39 @@ async def sse_get(host: str, port: int, path: str) -> Tuple[int, Dict]:
     return status, body
 
 
+async def http_get_text(host: str, port: int, path: str,
+                        ) -> Tuple[int, str]:
+    """Raw-text GET (the ``/metrics`` scrape — Prometheus text is not
+    JSON, so ``sse_get`` cannot fetch it)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    n = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        if h.lower().startswith(b"content-length:"):
+            n = int(h.split(b":")[1])
+    body = (await reader.readexactly(n)).decode() if n else ""
+    writer.close()
+    await writer.wait_closed()
+    return status, body
+
+
+def _export_trace(engine, path: str) -> None:
+    """Dump the run's span timeline as Chrome/Perfetto trace_event JSON
+    (``--trace-out``), re-validated on the way out."""
+    if not path:
+        return
+    n = engine.telemetry.export_trace(path)
+    with open(path) as f:
+        validate_trace_events(json.load(f))
+    print(f"trace: {n} events -> {path} (open in ui.perfetto.dev)",
+          flush=True)
+
+
 # ---------------------------------------------------------------------------
 # gateway boot
 # ---------------------------------------------------------------------------
@@ -292,6 +333,7 @@ async def _serve(args) -> int:
         pass
     finally:
         await gateway.stop(timeout_s=5.0)
+        _export_trace(gateway.engine, args.trace_out)
     return 0
 
 
@@ -326,6 +368,21 @@ async def _serve_smoke(args) -> int:
 
     await asyncio.gather(*(one(i, a) for i, a in enumerate(arrivals)))
     wall = loop.time() - t0
+
+    # telemetry surfaces, checked over the live socket (DESIGN.md §11):
+    # /metrics parses as Prometheus text and the three stats views —
+    # engine, gateway, HTTP — expose identical key sets
+    m_status, m_text = await http_get_text(args.host, port, "/metrics")
+    assert m_status == 200, f"/metrics returned {m_status}"
+    samples = parse_prometheus_text(m_text)
+    assert samples, "/metrics served no samples"
+    s_status, http_stats = await sse_get(args.host, port, "/stats")
+    assert s_status == 200, f"/stats returned {s_status}"
+    assert (set(http_stats) == set(gateway.stats())
+            == set(gateway.engine.stats())), "stats key drift"
+    print(f"/metrics: {len(samples)} samples, "
+          f"/stats: {len(http_stats)} keys (views agree)", flush=True)
+
     await gateway.stop(timeout_s=30.0)
     server.close()
     await server.wait_closed()
@@ -347,6 +404,27 @@ async def _serve_smoke(args) -> int:
     assert ok + shed == args.agents, "every request must resolve"
     assert ok > 0 and len(all_events) > 0, "no tokens streamed"
     assert len(done) == ok, "every admitted session must finish"
+
+    # timeline export + the acceptance cross-check: per-session spans
+    # must reconstruct TTFT/TPOT within 1% of metrics.py's values
+    tracer = gateway.engine.telemetry.tracer
+    if tracer is not None and done:
+        from repro.serving.metrics import collect_tpots, collect_ttfts
+        span_ttfts, span_tpot = reconstruct_latency(tracer.spans)
+        m_ttfts = collect_ttfts(done)
+        m_tpots = collect_tpots(done)
+        if m_ttfts:
+            a, b = float(np.mean(span_ttfts)), float(np.mean(m_ttfts))
+            assert abs(a - b) <= 0.01 * b, f"span TTFT {a} vs {b}"
+        if m_tpots:
+            a, b = span_tpot, float(np.mean(m_tpots))
+            assert abs(a - b) <= 0.01 * b, f"span TPOT {a} vs {b}"
+        assert tracer.open_span_count() == 0, \
+            f"leaked spans: {tracer.open_spans()}"
+        print(f"span reconstruction OK: {len(span_ttfts)} TTFTs, "
+              f"mean TPOT {span_tpot * 1e3:.2f}ms within 1% of metrics",
+              flush=True)
+    _export_trace(gateway.engine, args.trace_out)
     return 0
 
 
@@ -366,6 +444,8 @@ def _closed_loop(args) -> int:
             num_system_prompts=1, seed=args.seed)
         rep = eng.run(sessions)
         print(rep.row(), flush=True)
+        # --compare reruns per policy; the trace captures the last run
+        _export_trace(eng, args.trace_out)
     return 0
 
 
@@ -401,6 +481,10 @@ def main(argv=None) -> int:
                     help="KV cache layout (DESIGN.md §8): paged enables "
                          "zero-copy prefix sharing and park/unpark")
     ap.add_argument("--kv-page-size", type=int, default=64)
+    ap.add_argument("--trace-out", default="",
+                    help="write the run's span timeline as Chrome/"
+                         "Perfetto trace_event JSON to this path "
+                         "(load in ui.perfetto.dev or chrome://tracing)")
     args = ap.parse_args(argv)
 
     if args.serve_smoke:

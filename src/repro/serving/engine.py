@@ -87,6 +87,7 @@ from repro.serving.metrics import ServingReport, SLOThresholds, build_report
 from repro.serving.policies import PolicySpec, make_planner
 from repro.serving.reactor import TokenEvent
 from repro.serving.request import Session, SessionState
+from repro.serving.telemetry import RegistryDict, Telemetry
 
 
 @dataclasses.dataclass
@@ -130,6 +131,11 @@ class EngineConfig:
     #                                  tolerated before the session is
     #                                  aborted (the back-off valve that
     #                                  frees pages under hard pressure)
+    # --- telemetry (DESIGN.md §11) ------------------------------------
+    telemetry: bool = True           # span tracing + latency histograms
+    #                                  (the metrics registry — the stats
+    #                                  surface — is always on)
+    spans_max: int = 200_000         # completed-span ring capacity
 
 
 def _resume_buckets(cfg: EngineConfig) -> List[int]:
@@ -272,6 +278,40 @@ def get_executables(mcfg: ModelConfig, num_slots: int, max_seq: int,
             resume=jax.jit(r, donate_argnums=(1,)),
             megastep=megastep)
     return _EXEC_CACHE[key]
+
+
+def _plan_kind(plan: CyclePlan) -> str:
+    """Dispatch-kind label for the cycle span: the streams the plan
+    touches, joined (a fused cycle reads e.g. "mega+resume")."""
+    parts = []
+    if plan.decode is not None:
+        parts.append("mega" if plan.decode.megastep_target > 0
+                     else "decode")
+    if plan.resume is not None:
+        parts.append("resume")
+    if plan.prefill:
+        parts.append("prefill")
+    if plan.admissions and not parts:
+        parts.append("admit")
+    return "+".join(parts) or "idle"
+
+
+def _planned_tokens(plan: CyclePlan) -> int:
+    """Token volume the plan *intended* — compared against the dispatch
+    counters in the cycle span (planned vs actual drift is the clamp /
+    divergence signal)."""
+    total = 0
+    if plan.decode is not None:
+        total += max(1, plan.decode.megastep_target) * \
+            len(plan.decode.session_ids)
+    if plan.resume is not None:
+        total += plan.resume.bucket * len(plan.resume.session_ids)
+    for op in plan.prefill:
+        if op.kind == "pack":
+            total += op.shape * len(op.session_ids)
+        else:
+            total += op.shape * op.reps
+    return total
 
 
 @dataclasses.dataclass
@@ -442,16 +482,68 @@ class ServingEngine:
         # their [K, B] token sequence; holding the device arrays costs
         # nothing — they are outputs the executables produce anyway)
         self._window_toks: List[jax.Array] = []
-        self.hotpath_stats = {"fused_steps": 0, "megasteps": 0,
-                              "mega_tokens": 0, "resume_batches": 0,
-                              "resume_jobs": 0, "capacity_overruns": 0,
-                              "cold_batches": 0, "cold_jobs": 0,
-                              "prefill_tiles_streamed": 0,
-                              "prefill_tiles_skipped": 0,
-                              "parks": 0, "unparks": 0,
-                              "preemptions": 0, "preempt_resumes": 0,
-                              "aborted": 0, "deadline_aborts": 0,
-                              "kv_deferred": 0}
+        # unified telemetry (DESIGN.md §11): one registry is THE stats
+        # surface — engine.stats(), gateway.stats() and GET /stats +
+        # /metrics all read it, so their key sets cannot drift.  The
+        # legacy hotpath_stats dict keeps its call-site syntax via
+        # RegistryDict; keys that would collide with gateway counters
+        # register under an engine_ prefix.
+        self.telemetry = Telemetry(enabled=self.ecfg.telemetry,
+                                   spans_max=self.ecfg.spans_max)
+        reg = self.telemetry.registry
+        self.hotpath_stats = RegistryDict(
+            reg,
+            {"fused_steps": 0, "megasteps": 0,
+             "mega_tokens": 0, "resume_batches": 0,
+             "resume_jobs": 0, "capacity_overruns": 0,
+             "cold_batches": 0, "cold_jobs": 0,
+             "prefill_tiles_streamed": 0,
+             "prefill_tiles_skipped": 0,
+             "parks": 0, "unparks": 0,
+             "preemptions": 0, "preempt_resumes": 0,
+             "aborted": 0, "deadline_aborts": 0,
+             "kv_deferred": 0},
+            rename={"aborted": "engine_aborted",
+                    "parks": "engine_parks",
+                    "unparks": "engine_unparks"},
+            help_prefix="engine hot-path counter: ")
+        self._h_ttft = reg.histogram(
+            "ttft_s", help="request submission -> first token (s)")
+        self._h_tpot = reg.histogram(
+            "tpot_s", help="inter-token gap within decode bursts (s)")
+        self._h_gap = reg.histogram(
+            "dispatch_gap_s",
+            help="host gap between consecutive decode dispatches (s)")
+        self._h_devwait = reg.histogram(
+            "device_wait_s",
+            help="block_until_ready wait at decode flush points (s)")
+        self._h_host = reg.histogram(
+            "cycle_host_s", help="wall time of one dispatched cycle (s)")
+        reg.gauge("q_decode", help="decode-queue depth",
+                  fn=lambda: float(self.queues.occupancy()[0]))
+        reg.gauge("q_prefill", help="prefill-queue depth",
+                  fn=lambda: float(self.queues.occupancy()[1]))
+        reg.gauge("free_slots", help="unbound KV slots",
+                  fn=lambda: float(self.pool.free_slots))
+        reg.gauge("slots_in_use", help="bound KV slots",
+                  fn=lambda: float(self.pool.slots_in_use))
+        reg.gauge("prefix_hits", help="prefix-cache restores",
+                  fn=lambda: float(self.pool.stats["prefix_hits"]))
+        reg.gauge("kv_pressure", help="1 when a KVExhausted deferral "
+                  "happened within the last 50 cycles",
+                  fn=lambda: float(self.kv_pressure_recent()))
+        if self._paged:
+            reg.gauge("free_pages", help="free KV arena pages",
+                      fn=lambda: float(self.pool.free_pages))
+            reg.gauge("pages_in_use", help="allocated KV arena pages",
+                      fn=lambda: float(self.pool.pages_in_use))
+            reg.gauge("page_copies", help="copy-on-write page copies",
+                      fn=lambda: float(self.pool.stats["page_copies"]))
+        # dispatch-gap + per-cycle accounting state
+        self._last_dispatch_t: Optional[float] = None
+        self._cycle_decode_tokens = 0
+        self._cycle_prefill_tokens = 0
+        self._cycle_block_s = 0.0
         # fault-domain state (DESIGN.md §10): the installed chaos plan,
         # per-session KVExhausted deferral counts, and the last cycle a
         # deferral happened (the gateway's admission-tightening signal)
@@ -622,6 +714,7 @@ class ServingEngine:
             jnp.int32(sess.slot), jnp.int32(self.pool.lengths[sess.slot]),
             jnp.int32(take - 1), *self._bt())
         self._note_prefill_dispatch([self.pool.lengths[sess.slot]], shape_len)
+        self._cycle_prefill_tokens += take
         self.pool.cache = new_cache
         self.pool.lengths[sess.slot] += take
         sess.prefill_done += take
@@ -674,6 +767,14 @@ class ServingEngine:
         sess.first_token_s.append(now)
         sess.token_times_s.append(now)
         sess.decoded = 1
+        self._h_ttft.observe(now - sess.arrival_s)
+        tr = self.telemetry.tracer
+        if tr is not None:
+            # DECODE span start == first-token timestamp; ``tokens``
+            # lets the span reconstruction recover the mean TPOT
+            tr.transition(sess.session_id, "DECODE", now,
+                          tokens=sess.current_turn.decode_len,
+                          turn=sess.turn_idx)
         self._emit(sess, sess.last_token, now, index=0, first=True,
                    turn_end=sess.decoded >= sess.current_turn.decode_len)
         self._after_token(sess, now)
@@ -761,6 +862,13 @@ class ServingEngine:
         self._sync_device_state(active)
         if self._window_t0 is None:
             self._window_t0 = self._clock()
+        # host gap between consecutive decode dispatches (the ROADMAP
+        # host-overhead histogram): previous dispatch return -> this
+        # dispatch's device submission.  KVExhausted returns above never
+        # reach here, so a deferred cycle cannot corrupt the series.
+        t_disp = self._clock()
+        if self._last_dispatch_t is not None:
+            self._h_gap.observe(t_disp - self._last_dispatch_t)
         if exe is not None:
             step_toks, nt, nc, nl = exe(self.params, self.pool.cache,
                                         self._dev_tokens, self._dev_lengths,
@@ -776,6 +884,8 @@ class ServingEngine:
             self.hotpath_stats["fused_steps"] += 1
         self._dev_tokens, self._dev_lengths = nt, nl
         self.pool.cache = nc
+        self._last_dispatch_t = self._clock()
+        self._cycle_decode_tokens += K * len(active)
         self._window_steps += K
         self._window_sessions = list(active)
         burst_done = False
@@ -799,12 +909,20 @@ class ServingEngine:
         n = self._window_steps
         if n == 0:
             return
+        t_wait = self._clock()
         jax.block_until_ready(self._dev_tokens)
         now = self._clock()
+        self._h_devwait.observe(now - t_wait)
+        self._cycle_block_s += now - t_wait
         t0 = self._window_t0
         if t0 is not None and now > t0:
             self.scheduler.record_decode_step(now - t0, steps=n)
             ts = [t0 + (now - t0) * (i + 1) / n for i in range(n)]
+            # one weighted observation per flush, not one per token:
+            # the window-mean gap for each of the window's n steps
+            # across every session in the window
+            self._h_tpot.observe((now - t0) / n,
+                                 n * len(self._window_sessions))
         else:
             ts = [now] * n
         toks = np.asarray(self._dev_tokens)
@@ -836,10 +954,17 @@ class ServingEngine:
             sess.state = SessionState.DECODING
             return
         self._dev_dirty = True           # session leaves the decode stream
+        tr = self.telemetry.tracer
         if sess.turn_idx + 1 >= len(sess.turns):
             sess.state = SessionState.FINISHED
             self.pool.free(sess.slot)
+            if tr is not None:
+                tr.slot_free(sess.slot, now)
+                tr.transition(sess.session_id, "DONE", now)
             return
+        if tr is not None:
+            tr.transition(sess.session_id, "TOOL_WAIT", now,
+                          turn=sess.turn_idx + 1)
         sess.turn_idx += 1
         sess.prefill_done = 0
         sess.decoded = 0
@@ -857,6 +982,16 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # plan execution: admission
     # ------------------------------------------------------------------
+    def _slot_bind_span(self, slot: int, sid: int, t: float) -> None:
+        tr = self.telemetry.tracer
+        if tr is not None:
+            tr.slot_bind(slot, sid, t)
+
+    def _slot_free_span(self, slot: int, t: float) -> None:
+        tr = self.telemetry.tracer
+        if tr is not None:
+            tr.slot_free(slot, t)
+
     def _exec_admission(self, adm: Admission, now: float) -> None:
         s = self._sessions.get(adm.session_id)
         if s is None:
@@ -869,6 +1004,7 @@ class ServingEngine:
             except KVExhausted:
                 self._kv_defer_or_abort(s.session_id)
                 return  # admission deferred: retries next cycle
+            self._slot_bind_span(s.slot, s.session_id, now)
             # always probe, even when the plan's peek saw a miss: the
             # pool's hit/miss accounting and LRU recency refresh are
             # dispatch-time effects that must happen exactly once —
@@ -889,6 +1025,7 @@ class ServingEngine:
                 self.pool.unpark(s.slot,
                                  self._parked.pop(s.session_id))
                 self.hotpath_stats["unparks"] += 1
+                self._slot_bind_span(s.slot, s.session_id, now)
             elif s.slot < 0:
                 return                   # parked, but the plan diverged
         else:
@@ -913,6 +1050,12 @@ class ServingEngine:
         s.queue_delays_s.append(max(0.0, now - s.ready_s)
                                 if np.isfinite(s.ready_s) else 0.0)
         s.state = SessionState.PREFILLING
+        tr = self.telemetry.tracer
+        if tr is not None:
+            # span start == request_arrivals entry: the TTFT operand
+            tr.transition(s.session_id,
+                          "RESUME" if s.turn_idx else "PREFILL", now,
+                          turn=s.turn_idx)
         job = Job(session_id=s.session_id, phase=adm.phase,
                   new_len=s.remaining_prefill, arrival_s=now)
         if adm.to_decode_queue:
@@ -932,6 +1075,11 @@ class ServingEngine:
         if s is None or s.state != SessionState.PREFILLING or s.slot < 0:
             return
         self._parked[sid] = self.pool.park(s.slot)
+        t = self._clock()
+        self._slot_free_span(s.slot, t)
+        tr = self.telemetry.tracer
+        if tr is not None:
+            tr.transition(sid, "PAUSED", t)
         s.slot = -1
         s.state = SessionState.PREFILL_PAUSED
         self._preempt_count += 1
@@ -956,6 +1104,13 @@ class ServingEngine:
 
         self.pool.unpark(s.slot, self._parked.pop(sid))
         self._paused_seq.pop(sid, None)
+        self._slot_bind_span(s.slot, sid, now)
+        tr = self.telemetry.tracer
+        if tr is not None:
+            # ``resumed`` tells the TTFT reconstruction this PREFILL
+            # continues the original request, it does not start one
+            tr.transition(sid, "PREFILL", now, turn=s.turn_idx,
+                          resumed=True)
         s.state = SessionState.PREFILLING
         self.queues.q_prefill.append(Job(
             session_id=sid, phase=Phase.COLD_PREFILL,
@@ -1054,6 +1209,7 @@ class ServingEngine:
             *self._bt())
         self.pool.cache = new_cache
         self._note_prefill_dispatch(lens, bucket, cold_pack=cold_pack)
+        self._cycle_prefill_tokens += sum(takes)
 
         np_logits: Optional[np.ndarray] = None
         unfinished: List[Tuple[Job, Session]] = []
@@ -1187,6 +1343,9 @@ class ServingEngine:
             raise ValueError(
                 f"duplicate session_id {session.session_id}")
         self._sessions[session.session_id] = session
+        tr = self.telemetry.tracer
+        if tr is not None:
+            tr.transition(session.session_id, "QUEUED", self._clock())
 
     def start_online(self) -> None:
         """Arm the reactor for open-ended stepping: apply the run-start
@@ -1312,8 +1471,22 @@ class ServingEngine:
 
         # ---- plan → execute ---------------------------------------
         view = self.snapshot(now)
-        plan = dataclasses.replace(self.planner.plan(view), control=ctrl)
+        plan = self.planner.plan(view)
+        # stamp the telemetry/journal correlation id — but only on the
+        # -1 sentinel: a ReplayPlanner hands back recorded plans whose
+        # original ids must survive so replayed timelines diff cleanly
+        plan = dataclasses.replace(
+            plan, control=ctrl,
+            plan_id=self._cycle if plan.plan_id < 0 else plan.plan_id)
+        if plan.decode is None:
+            # decode pauses this cycle: the next dispatch gap would
+            # span scheduling dead time, not host dispatch overhead
+            self._last_dispatch_t = None
         events_before = len(self._events)
+        self._cycle_decode_tokens = 0
+        self._cycle_prefill_tokens = 0
+        self._cycle_block_s = 0.0
+        t_host0 = time.perf_counter()
         try:
             outcome = self.dispatcher.execute(plan, now)
         except SessionFault as f:
@@ -1322,6 +1495,20 @@ class ServingEngine:
             # partial cycle state exists); abort it and keep serving
             self.abort_session(f.session_id, f.reason)
             outcome = CycleOutcome(did_work=True)
+        host_s = time.perf_counter() - t_host0
+
+        if outcome.did_work:
+            self._h_host.observe(host_s)
+            tr = self.telemetry.tracer
+            if tr is not None:
+                tr.cycle(plan.plan_id, _plan_kind(plan), now,
+                         self._clock(),
+                         planned=_planned_tokens(plan),
+                         actual=(self._cycle_decode_tokens
+                                 + self._cycle_prefill_tokens),
+                         host_ms=round(host_s * 1e3, 4),
+                         block_ms=round(self._cycle_block_s * 1e3, 4),
+                         q_d=outcome.q_d, q_p=outcome.q_p)
 
         if len(self.trace) < ecfg.trace_max:
             self.trace.append(dict(
@@ -1345,6 +1532,13 @@ class ServingEngine:
         this at shutdown; ``run()`` calls it before building the
         report)."""
         self._flush_decode()
+
+    def stats(self) -> Dict[str, float]:
+        """The unified stats surface: a flat snapshot of the telemetry
+        registry.  ``gateway.stats()`` and the HTTP ``/stats`` route
+        return exactly this dict (plus nothing), so the three views
+        cannot drift."""
+        return self.telemetry.registry.snapshot()
 
     # ---- online session control --------------------------------------
     def resume_session(self, session_id: int) -> None:
@@ -1372,6 +1566,7 @@ class ServingEngine:
         if s.slot < 0:
             return                       # already parked
         self._parked[session_id] = self.pool.park(s.slot)
+        self._slot_free_span(s.slot, self._clock())
         s.slot = -1
         self.hotpath_stats["parks"] += 1
 
@@ -1396,8 +1591,10 @@ class ServingEngine:
             stale = [j for j in q if j.session_id == session_id]
             for j in stale:
                 q.remove(j)
+        t_now = self._clock()
         if s.slot >= 0:
             self.pool.free(s.slot)
+            self._slot_free_span(s.slot, t_now)
             s.slot = -1
         entry = self._parked.pop(session_id, None)
         if entry is not None:
@@ -1408,8 +1605,11 @@ class ServingEngine:
         s.state = SessionState.ABORTED
         s.abort_reason = reason
         self.hotpath_stats["aborted"] += 1
+        tr = self.telemetry.tracer
+        if tr is not None:
+            tr.transition(session_id, "ABORTED", t_now, reason=reason)
         self._events.append(TokenEvent(
-            session_id=session_id, token=-1, t=self._clock(),
+            session_id=session_id, token=-1, t=t_now,
             turn_idx=s.turn_idx, index=-1, session_end=True,
             error=True, abort_reason=reason))
         return True
@@ -1477,6 +1677,14 @@ class ServingEngine:
         for s in sessions:
             self.attach(s)
         self._t0 = time.perf_counter()
+        self._last_dispatch_t = None
+        tr = self.telemetry.tracer
+        if tr is not None:
+            # the clock just restarted: spans opened by attach() above
+            # carry pre-reset timestamps — reopen the cohort at t=0
+            tr.reset()
+            for s in sessions:
+                tr.transition(s.session_id, "QUEUED", 0.0)
         self._begin()
         ecfg = self.ecfg
         self.event_log = []

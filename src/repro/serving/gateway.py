@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.admission import WatermarkGate
 from repro.serving.reactor import EngineReactor, RequestHandle, TokenEvent
 from repro.serving.request import Session, SessionState
+from repro.serving.telemetry import RegistryDict
 
 # tool_fn(session, completed_turn_idx) -> optional replacement tokens
 # for the *next* turn's prefill (a real tool's output); None keeps the
@@ -194,10 +195,33 @@ class AgentGateway:
         # aborted sessions (fault/deadline/disconnect), same retention
         self.failed_sessions: Deque[Session] = collections.deque(
             maxlen=self.cfg.completed_history)
-        self.counters = {"submitted": 0, "rejected": 0, "completed": 0,
-                         "parked": 0, "tool_calls": 0, "tool_errors": 0,
-                         "aborted": 0, "cancelled": 0, "tool_retries": 0,
-                         "tool_timeouts": 0, "engine_errors": 0}
+        # gateway metrics register into the ENGINE's registry
+        # (DESIGN.md §11): engine.stats(), gateway.stats() and the HTTP
+        # /stats + /metrics surfaces are all views of one object
+        reg = engine.telemetry.registry
+        self.counters = RegistryDict(
+            reg,
+            {"submitted": 0, "rejected": 0, "completed": 0,
+             "parked": 0, "tool_calls": 0, "tool_errors": 0,
+             "aborted": 0, "cancelled": 0, "tool_retries": 0,
+             "tool_timeouts": 0, "engine_errors": 0},
+            help_prefix="gateway counter: ")
+        reg.gauge("gate_admitted", help="watermark-gate admissions",
+                  fn=lambda: float(self.gate.admitted))
+        reg.gauge("gate_rejected", help="watermark-gate sheds",
+                  fn=lambda: float(self.gate.rejected))
+        reg.gauge("gate_shedding", help="1 while the gate is closed",
+                  fn=lambda: float(self.gate.shedding))
+        reg.gauge("gate_pressure", help="KV-pressure watermark tighten",
+                  fn=lambda: float(self.gate.pressure))
+        reg.gauge("occupancy", help="admission occupancy (queues + "
+                  "waiting sessions + staged ops)",
+                  fn=lambda: float(self.occupancy()))
+        reg.gauge("live_sessions", help="streaming sessions in flight",
+                  fn=lambda: float(len(self._live)))
+        reg.gauge("failed_sessions", help="aborted sessions retained "
+                  "for reporting",
+                  fn=lambda: float(len(self.failed_sessions)))
 
     # ---- lifecycle ----------------------------------------------------
     async def start(self) -> None:
@@ -442,8 +466,11 @@ class AgentGateway:
         bounded retries with exponential backoff + jitter.  Returns
         whether any attempt succeeded."""
         cfg, sess = self.cfg, live.session
+        tracer = self.engine.telemetry.tracer
         attempts = 1 + max(0, cfg.tool_retries)
         for attempt in range(attempts):
+            t_att = self.engine.clock()
+            outcome = "error"
             try:
                 next_tokens = await asyncio.wait_for(
                     self._call_tool(sess, turn_idx, attempt),
@@ -453,13 +480,23 @@ class AgentGateway:
                     # scripted prefill (safe: it hasn't started)
                     sess.turns[turn_idx + 1].prefill_tokens = np.asarray(
                         next_tokens, np.int32)
+                outcome = "ok"
                 return True
             except asyncio.CancelledError:
                 raise
             except asyncio.TimeoutError:
+                outcome = "timeout"
                 self.counters["tool_timeouts"] += 1
             except Exception:
                 pass
+            finally:
+                if tracer is not None:
+                    # per-attempt child span under the session's open
+                    # TOOL_WAIT span, annotated with retry/timeout fate
+                    tracer.child(sess.session_id, "tool_attempt",
+                                 t_att, self.engine.clock(),
+                                 turn=turn_idx, attempt=attempt,
+                                 outcome=outcome)
             if attempt + 1 < attempts:
                 self.counters["tool_retries"] += 1
                 await asyncio.sleep(self._backoff_s(attempt))
@@ -489,32 +526,12 @@ class AgentGateway:
 
     # ---- observability -------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        q_d, q_p = self.engine.queues.occupancy()
-        out = {
-            **{k: float(v) for k, v in self.counters.items()},
-            "gate_admitted": float(self.gate.admitted),
-            "gate_rejected": float(self.gate.rejected),
-            "gate_shedding": float(self.gate.shedding),
-            "occupancy": float(self.occupancy()),
-            "q_decode": float(q_d),
-            "q_prefill": float(q_p),
-            "free_slots": float(self.engine.pool.free_slots),
-            "live_sessions": float(len(self._live)),
-            "engine_parks": float(self.engine.hotpath_stats["parks"]),
-            "engine_unparks": float(self.engine.hotpath_stats["unparks"]),
-            # fault-domain counters (DESIGN.md §10)
-            "deadline_aborts": float(
-                self.engine.hotpath_stats["deadline_aborts"]),
-            "kv_deferred": float(self.engine.hotpath_stats["kv_deferred"]),
-            "gate_pressure": float(self.gate.pressure),
-            "failed_sessions": float(len(self.failed_sessions)),
-        }
-        pool = self.engine.pool
-        if hasattr(pool, "free_pages"):   # paged layout (DESIGN.md §8)
-            out["free_pages"] = float(pool.free_pages)
-            out["prefix_hits"] = float(pool.stats["prefix_hits"])
-            out["page_copies"] = float(pool.stats["page_copies"])
-        return out
+        """One snapshot of the unified registry — identical (by
+        construction, not convention) to ``engine.stats()`` and to what
+        ``GET /stats`` / ``GET /metrics`` serve.  The PR-6 drift where
+        fault counters existed in some views but not others cannot
+        recur: there is only one view."""
+        return self.engine.stats()
 
 
 # ---------------------------------------------------------------------------

@@ -165,6 +165,11 @@ class KVCachePool:
     def free_slots(self) -> int:
         return len(self._free)
 
+    @property
+    def slots_in_use(self) -> int:
+        """Bound KV slots — the telemetry occupancy gauge."""
+        return self.num_slots - len(self._free)
+
     # ---- prefix cache ---------------------------------------------------
     def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
         """Snapshot ``slot``'s cache rows as a reusable prefix.  Must be
@@ -393,6 +398,11 @@ class PagedKVCachePool(KVCachePool):
     @property
     def free_pages(self) -> int:
         return len(self._free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Allocated arena pages — the telemetry page-occupancy gauge."""
+        return self.num_pages - len(self._free_pages)
 
     def _alloc_page(self) -> int:
         if self.fault_hook is not None:

@@ -51,15 +51,21 @@ class ServingReport:
     slo_attainment: float
     total_output_tokens: int
     extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # telemetry-overhead self-check (DESIGN.md §11): tok/s cost of
+    # tracing, measured by the hotpath bench as (off - on) / off over
+    # best-of-N paired runs; NaN when the run didn't measure it
+    telemetry_overhead_pct: float = float("nan")
 
     def row(self) -> str:
         return (f"{self.policy},{self.num_sessions},{self.wall_time_s:.3f},"
                 f"{self.ttft_p50_s * 1e3:.1f},{self.ttft_p95_s * 1e3:.1f},"
                 f"{self.tpot_p50_s * 1e3:.1f},{self.tpot_p95_s * 1e3:.1f},"
-                f"{self.throughput_tok_s:.1f},{self.slo_attainment:.3f}")
+                f"{self.throughput_tok_s:.1f},{self.slo_attainment:.3f},"
+                f"{self.telemetry_overhead_pct:.2f}")
 
     HEADER = ("policy,sessions,wall_s,ttft_p50_ms,ttft_p95_ms,"
-              "tpot_p50_ms,tpot_p95_ms,throughput_tok_s,slo_rate")
+              "tpot_p50_ms,tpot_p95_ms,throughput_tok_s,slo_rate,"
+              "telemetry_overhead_pct")
 
 
 def collect_ttfts(sessions: Sequence[Session]) -> List[float]:
@@ -143,6 +149,8 @@ class OpenLoopReport:
     # per-reason abort attribution (e.g. {"deadline": 3}) — a dict, so
     # excluded from the CSV row
     abort_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # telemetry-overhead self-check (see ServingReport)
+    telemetry_overhead_pct: float = float("nan")
 
     def row(self) -> str:
         return (f"{self.policy},{self.offered_rps:.3f},{self.submitted},"
@@ -153,12 +161,13 @@ class OpenLoopReport:
                 f"{self.tpot_p50_s * 1e3:.1f},{self.tpot_p95_s * 1e3:.1f},"
                 f"{self.queue_delay_p50_s * 1e3:.1f},"
                 f"{self.queue_delay_p95_s * 1e3:.1f},"
-                f"{self.slo_attainment:.3f}")
+                f"{self.slo_attainment:.3f},"
+                f"{self.telemetry_overhead_pct:.2f}")
 
     HEADER = ("policy,offered_rps,submitted,completed,rejected,aborted,"
               "wall_s,goodput_tok_s,throughput_tok_s,ttft_p50_ms,"
               "ttft_p95_ms,tpot_p50_ms,tpot_p95_ms,qdelay_p50_ms,"
-              "qdelay_p95_ms,slo_rate")
+              "qdelay_p95_ms,slo_rate,telemetry_overhead_pct")
 
 
 def collect_abort_reasons(sessions: Sequence[Session]) -> Dict[str, int]:
